@@ -1,0 +1,111 @@
+"""Shared benchmark helpers: wall-clock timing of jitted callables and the
+TPU-v5e analytic latency model used to project paper figures from dry-run
+artifacts (this container has no TPU; wall-time benches run CPU-scale
+proxies, latency projections use the roofline constants)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Analytic decode-latency model (paper §5: inference is memory-bandwidth
+# bound; latency ≈ critical-path bytes / aggregate achievable bandwidth +
+# collective latency).
+# ---------------------------------------------------------------------------
+
+
+def _split_params(cfg):
+    from repro.configs.base import count_params, ffn_param_count
+
+    total = count_params(cfg)
+    expert_params = 0
+    n_moe_layers = 0
+    for seg in cfg.segments:
+        for ls in seg.pattern:
+            if ls.ffn.kind == "moe":
+                expert_params += (
+                    ffn_param_count(cfg, ls.ffn, active=False)
+                    - ffn_param_count(cfg, ls.ffn, active=True)
+                ) * seg.repeats
+                n_moe_layers += seg.repeats
+    return total - expert_params, expert_params, n_moe_layers
+
+
+def decode_latency_model(
+    cfg,
+    n_gpus: int,
+    *,
+    optimized: bool,
+    tokens_per_gpu: int = 16,
+    bytes_per_param: int = 2,
+) -> float:
+    """Seconds per decode step, weak-scaling serving load (B = 16·g tokens —
+    with a production batch every expert is touched, so each GPU reads its
+    local expert shard once: expert bytes/GPU = expert_params/g, which is
+    the §5.5.1 data-locality effect behind super-linear throughput).
+
+    Both layouts get expert parallelism and TP≤8 (the paper's PyTorch
+    baseline has both); the *differences* are the measured structural ones:
+      * MoE kernel path: baseline pays the §5.4 sparse-einsum factor (6x)
+      * non-expert kernels: DS inference kernels ≈1.5x better bandwidth
+      * a2a: flat O(p) hops vs parallelism-coordinated O(p/L)+O(L) (§5.3)
+    """
+    nonexpert, expert_params, n_moe = _split_params(cfg)
+    g = n_gpus
+    # dense models use 16-way tensor slicing; MoE runs at half the TS degree
+    # (paper §5.5.4: "8-way vs. 16-way")
+    tp = min(g, 16 if n_moe == 0 else 8)
+    B = tokens_per_gpu * g
+    hop_lat = 5e-6
+    tok_bytes = cfg.d_model * bytes_per_param * tokens_per_gpu
+
+    t_expert = (expert_params * bytes_per_param / g) / HBM_BW
+    t_nonexpert = (nonexpert * bytes_per_param / tp) / HBM_BW
+    # tensor-slicing all-reduces: 2 per layer; baseline NCCL small-message
+    # overhead ~50us vs optimized (SCCL + fused) ~5us (§5.3)
+    n_layers = cfg.num_layers
+    if optimized:
+        t_tp = 0.0 if tp == 1 else 2 * n_layers * (5e-6 + tok_bytes / ICI_BW)
+        a2a = n_moe * 2 * (hop_lat * max(g // tp, 1) + tok_bytes / ICI_BW)
+        return t_expert + t_nonexpert + a2a + t_tp
+    else:
+        t_tp = 0.0 if tp == 1 else 2 * n_layers * (50e-6 + tok_bytes / ICI_BW)
+        # sparse-einsum MoE kernels (≈6x, §5.4) + slower dense kernels (1.5x)
+        a2a = n_moe * 2 * (hop_lat * g + tok_bytes / ICI_BW)
+        return 6.0 * t_expert + 1.5 * t_nonexpert + a2a + t_tp
+
+
+def min_gpus_to_fit(cfg, bytes_per_param: int = 2, hbm: float = 40e9) -> int:
+    """Fig. 12 used A100-40GB; default hbm matches the paper's hardware."""
+    from repro.configs.base import count_params
+
+    need = count_params(cfg) * bytes_per_param * 1.2  # +20% activations/workspace
+    g = 1
+    while g * hbm < need:
+        g *= 2
+    return g

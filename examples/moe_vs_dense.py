@@ -1,0 +1,83 @@
+"""Reproduces the paper's §3 result qualitatively at CPU scale: an MoE model
+with the SAME per-token compute as its dense base reaches a *lower* loss in
+the same number of steps (the "same cost, better quality" direction of the
+5x claim), and a dense model with ~4-5x the compute is needed to match it.
+
+This is the end-to-end training driver deliverable: ~100M-class models,
+a few hundred steps, real optimizer/data/trainer stack.
+
+  PYTHONPATH=src python examples/moe_vs_dense.py [--steps 300] [--scale full]
+"""
+import argparse
+import json
+
+from repro.configs.base import count_active_params, count_params
+from repro.core.prmoe import nlg_dense, nlg_moe
+from repro.data.pipeline import data_stream
+from repro.training.trainer import TrainConfig, train_loop
+
+VOCAB = 2048
+
+
+def run(cfg, steps: int, seed: int = 0, lr: float = 1.5e-3):
+    it = data_stream(VOCAB, global_batch=8, seq_len=128, seed=seed)
+    _, _, hist = train_loop(
+        cfg, TrainConfig(lr=lr, warmup_steps=max(steps // 20, 1), decay_steps=steps),
+        it, steps, log_every=max(steps // 10, 1),
+    )
+    return hist
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--scale", choices=["tiny", "full"], default="tiny",
+                    help="tiny: CPU-minutes scale; full: ~100M-param models")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.scale == "full":
+        base_layers, d, heads, experts = 12, 512, 8, 16
+        dense_equiv_layers, dense_equiv_d = 12, 1024
+    else:
+        base_layers, d, heads, experts = 4, 128, 4, 8
+        dense_equiv_layers, dense_equiv_d = 6, 256
+
+    f32 = dict(param_dtype="float32", compute_dtype="float32")
+    models = {
+        # same compute per token as the MoE below (its dense base):
+        "dense_base": nlg_dense("dense-base", base_layers, d, heads, vocab=VOCAB).replace(**f32),
+        # MoE at the base's compute cost (top-1, every other layer):
+        "moe": nlg_moe("moe", base_layers, d, heads, experts, vocab=VOCAB).replace(**f32),
+        # PR-MoE: pyramid + residual, fewer params, same quality target:
+        "pr_moe": nlg_moe("pr-moe", base_layers, d, heads, (experts // 2, experts),
+                          residual=True, vocab=VOCAB).replace(**f32),
+        # a bigger dense model (the "quality equivalent" costing ~4x more):
+        "dense_equiv": nlg_dense("dense-equiv", dense_equiv_layers, dense_equiv_d,
+                                 heads * 2, vocab=VOCAB).replace(**f32),
+    }
+
+    results = {}
+    for name, cfg in models.items():
+        print(f"\n=== {name}: {count_params(cfg)/1e6:.1f}M params, "
+              f"{count_active_params(cfg)/1e6:.1f}M active/token ===")
+        hist = run(cfg, args.steps)
+        results[name] = hist
+        print(f"{name}: final loss {hist[-1]['loss']:.4f}")
+
+    print("\n--- summary (final CE loss; lower is better) ---")
+    for name, hist in results.items():
+        cfg = models[name]
+        print(f"{name:12s} loss={hist[-1]['loss']:.4f} "
+              f"params={count_params(cfg)/1e6:7.1f}M active={count_active_params(cfg)/1e6:6.1f}M")
+    moe_final = results["moe"][-1]["loss"]
+    base_final = results["dense_base"][-1]["loss"]
+    print(f"\nMoE vs same-compute dense: {base_final - moe_final:+.4f} "
+          f"(positive = MoE better at equal training cost — paper §3.3)")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

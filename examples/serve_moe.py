@@ -1,0 +1,50 @@
+"""DS-MoE serving demo (§5): train a small MoE briefly, then serve batched
+requests through the engine comparing the paper-baseline sparse-einsum
+dispatch against the optimized dense mapping-table dispatch — the same model
+weights, measurably different step latency.
+
+  PYTHONPATH=src python examples/serve_moe.py
+"""
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.prmoe import nlg_moe
+from repro.data.pipeline import data_stream
+from repro.serving.engine import Engine, EngineConfig, Request
+from repro.training.trainer import TrainConfig, train_loop
+
+VOCAB = 512
+
+
+def main() -> None:
+    cfg = nlg_moe("serve-demo-moe", 4, 192, 4, 16, vocab=VOCAB).replace(
+        param_dtype="float32", compute_dtype="float32"
+    )
+    it = data_stream(VOCAB, 8, 64, seed=0)
+    params, _, _ = train_loop(
+        cfg, TrainConfig(lr=1.5e-3, warmup_steps=5, decay_steps=80), it, 80, log_every=40
+    )
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(1, VOCAB, size=24).tolist(), max_new_tokens=16)
+            for _ in range(8)]
+
+    for impl in ("einsum", "dense"):
+        eng = Engine(cfg.replace(moe_impl=impl), params,
+                     EngineConfig(max_batch=8, max_prefill=32, max_decode=16))
+        eng.generate(reqs[:1])  # compile
+        t0 = time.time()
+        out = eng.generate(reqs)
+        dt = time.time() - t0
+        n = sum(len(r.tokens) for r in out)
+        print(f"moe_impl={impl:7s}: {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+    print("sample generation:", out[0].tokens)
+    print("(dense mapping-table dispatch is the paper's §5.4 optimization; "
+          "einsum is the baseline it replaces)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""seamless-m4t-medium [audio] — enc-dec, 12L encoder + 12L decoder,
+d_model=1024 16H (kv=16, MHA) d_ff=4096 vocab=256206.  The speech frontend
+(mel + conformer feature extractor) is STUBBED per the assignment carve-out:
+``input_specs`` supplies precomputed frame embeddings [B, T_src, 1024].
+[arXiv:2308.11596]"""
+from repro.configs.base import (
+    AttnSpec,
+    EncoderConfig,
+    FFNSpec,
+    FrontendSpec,
+    LayerSpec,
+    ModelConfig,
+    uniform_segments,
+)
+
+_FFN = FFNSpec(kind="dense", d_ff=4096, act="relu")
+_ENC_LAYER = LayerSpec(AttnSpec(kind="global", causal=False, rope_theta=10_000.0), _FFN)
+_DEC_LAYER = LayerSpec(
+    AttnSpec(kind="global", rope_theta=10_000.0),
+    _FFN,
+    cross=AttnSpec(kind="cross", causal=False, use_rope=False),
+)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium",
+        family="encdec",
+        source="[arXiv:2308.11596]",
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=64,
+        vocab_size=256_206,
+        segments=uniform_segments(_DEC_LAYER, 12),
+        encoder=EncoderConfig(segments=uniform_segments(_ENC_LAYER, 12), max_source_len=4096),
+        frontend=FrontendSpec(kind="audio", n_tokens=1024, embed_dim=1024),
+        max_seq_len=32_768,
+        supports_long_context=False,
+    )

@@ -1,0 +1,50 @@
+"""Dense mapping-table dispatch — the paper's §5.4 optimization.
+
+Instead of one-hot einsums (S·E·M·c_e), tokens are routed with an explicit
+token→(expert, slot) mapping table realised as scatter/gather, reducing the
+data-movement complexity to S·M·c_e — the paper reports >6× MoE-kernel latency
+reduction from this (together with gating fusion, which the Pallas kernel in
+kernels/moe_gating.py provides on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gating import Gating
+
+
+def flat_slot(g: Gating, capacity: int, num_experts: int) -> jax.Array:
+    """[T, K] flattened destination slot in the [E*C (+1 trash)] buffer."""
+    slot = g.expert_idx * capacity + g.position
+    return jnp.where(g.keep, slot, num_experts * capacity)  # dropped -> trash row
+
+
+def dispatch_dense(x: jax.Array, g: Gating, capacity: int, num_experts: int) -> jax.Array:
+    """x: [T, D] -> expert buffers [E, C, D] via scatter (mapping table)."""
+    T, D = x.shape
+    K = g.expert_idx.shape[1]
+    dest = flat_slot(g, capacity, num_experts).reshape(-1)  # [T*K]
+    src = jnp.repeat(x, K, axis=0)  # [T*K, D] (cheap: K is 1..8)
+    buf = jnp.zeros((num_experts * capacity + 1, D), x.dtype)
+    buf = buf.at[dest].set(src, mode="drop", unique_indices=False)
+    return buf[:-1].reshape(num_experts, capacity, D)
+
+
+def combine_dense(ye: jax.Array, g: Gating, capacity: int, num_experts: int) -> jax.Array:
+    """ye: [E, C, D] -> [T, D]: gather each token's expert outputs and mix
+    with the gate weights."""
+    T, K = g.expert_idx.shape
+    D = ye.shape[-1]
+    flat = jnp.concatenate([ye.reshape(num_experts * capacity, D), jnp.zeros((1, D), ye.dtype)])
+    dest = flat_slot(g, capacity, num_experts)  # [T, K]
+    gathered = flat[dest]  # [T, K, D]
+    w = g.combine_w.astype(jnp.float32)[..., None]
+    return jnp.sum(gathered.astype(jnp.float32) * w, axis=1).astype(ye.dtype)
+
+
+def moe_dense(x: jax.Array, g: Gating, capacity: int, num_experts: int, expert_fn):
+    """Dense-dispatch MoE: scatter -> expert_fn([E,C,D]) -> gather-combine."""
+    xe = dispatch_dense(x, g, capacity, num_experts)
+    ye = expert_fn(xe)
+    return combine_dense(ye, g, capacity, num_experts)

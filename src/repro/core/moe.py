@@ -1,0 +1,109 @@
+"""The MoE FFN layer (DeepSpeed-MoE §3 + §4 + §5).
+
+Three interchangeable dispatch implementations (``cfg.moe_impl``):
+
+  * ``einsum`` — sparse one-hot einsum (paper's baseline, §5.4)
+  * ``dense``  — dense mapping-table scatter/gather (paper's optimization)
+  * ``ep``     — dense dispatch + explicit expert-parallel all-to-all under
+                 shard_map with parallelism-coordinated communication
+                 (paper §5.2-5.3); requires an active mesh.
+
+``residual=True`` adds the fixed dense-MLP branch of Residual-MoE (§4.1.1);
+combined with pyramid segments this gives PR-MoE.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FFNSpec, ModelConfig
+from repro.core import dispatch, dispatch_einsum
+from repro.core.gating import expert_capacity, load_balance_loss, top_k_gating
+from repro.models.modules import dense_init, init_mlp, mlp
+from repro.parallel.sharding import get_mesh, shard_hint
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig, spec: FFNSpec, dtype) -> dict:
+    d, f, e = cfg.d_model, spec.d_ff, spec.num_experts
+    ks = jax.random.split(key, 5)
+
+    def stack_init(k, in_dim, out_dim):
+        return jax.vmap(lambda kk: dense_init(kk, in_dim, out_dim, dtype))(jax.random.split(k, e))
+
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "wi": stack_init(ks[1], d, f),  # [E, D, F]
+        "wo": stack_init(ks[2], f, d),  # [E, F, D]
+    }
+    if spec.act == "swiglu":
+        p["wg"] = stack_init(ks[3], d, f)
+    if spec.residual:
+        p["residual"] = init_mlp(ks[4], d, spec.residual_d_ff or spec.d_ff, spec.act, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Expert FFN over stacked buffers
+# ---------------------------------------------------------------------------
+
+
+def experts_ffn(params: dict, xe: jax.Array, act: str) -> jax.Array:
+    """xe: [E, C, D] -> [E, C, D] — per-expert (Swi)GLU MLP as grouped GEMMs."""
+    h = jnp.einsum("ecd,edf->ecf", xe, params["wi"])
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["wg"])) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    return jnp.einsum("ecf,efd->ecd", h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Layer apply
+# ---------------------------------------------------------------------------
+
+
+def moe_layer(
+    cfg: ModelConfig,
+    spec: FFNSpec,
+    params: dict,
+    x: jax.Array,  # [B, S, D]
+    *,
+    impl: str | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,D], aux_loss scalar)."""
+    impl = impl or cfg.moe_impl
+    B, S, D = x.shape
+    E, K = spec.num_experts, spec.top_k
+
+    if impl == "ep" and get_mesh() is not None:
+        from repro.core.moe_parallel import moe_layer_ep
+
+        y, aux = moe_layer_ep(cfg, spec, params, x)
+    else:
+        xs = x.reshape(B * S, D)
+        T = B * S
+        capacity = expert_capacity(T, E, K, spec.capacity_factor)
+        logits = xs.astype(jnp.float32) @ params["router"]
+        g = top_k_gating(logits, K, capacity)
+        ef = lambda xe: experts_ffn(params, xe, spec.act)
+        if impl == "einsum":
+            y = dispatch_einsum.moe_einsum(xs, g, capacity, ef)
+        else:  # dense mapping-table
+            y = dispatch.moe_dense(xs, g, capacity, E, ef)
+        aux = load_balance_loss(g.probs, g.expert_idx, E)
+        y = y.reshape(B, S, D)
+
+    if spec.residual:
+        # Residual-MoE (§4.1.1): fixed dense MLP branch + gated expert branch.
+        y = y + mlp(params["residual"], x, spec.act)
+    y = shard_hint(y, "batch", "seq", "embed")
+    return y, aux

@@ -1,0 +1,154 @@
+"""PR-MoE / MoS model builders (DeepSpeed-MoE §4) and the paper's own NLG
+model family (§3, Table 1).
+
+* Standard MoE NLG: "<base>+MoE-E" = GPT base with E experts on every *other*
+  FFN layer, top-1 gating (Table 1: 350M+MoE-128, 1.3B+MoE-128).
+* PR-MoE: Pyramid (second half of MoE layers has 2× experts) + Residual
+  (fixed dense MLP + top-1 expert).  350M+PR-MoE-32/64, 1.3B+PR-MoE-64/128.
+* MoS: the PR-MoE student with depth reduced 24 -> 21 (12.5%), trained with
+  staged knowledge distillation (training/distill.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.configs.base import (
+    AttnSpec,
+    FFNSpec,
+    LayerSpec,
+    ModelConfig,
+    Segment,
+)
+
+
+def _gpt_attn() -> AttnSpec:
+    # Paper's NLG models are GPT-style: learned-pos in the original; we use
+    # RoPE (TPU-era idiom) — documented deviation, does not change any of the
+    # size/FLOP/communication claims being reproduced.
+    return AttnSpec(kind="global", rope_theta=10_000.0)
+
+
+def _dense_layer(d_ff: int) -> LayerSpec:
+    return LayerSpec(_gpt_attn(), FFNSpec(kind="dense", d_ff=d_ff, act="gelu"))
+
+
+def _moe_layer(d_ff: int, experts: int, residual: bool, top_k: int = 1) -> LayerSpec:
+    return LayerSpec(
+        _gpt_attn(),
+        FFNSpec(
+            kind="moe",
+            d_ff=d_ff,
+            act="gelu",
+            num_experts=experts,
+            top_k=top_k,
+            capacity_factor=1.25,
+            residual=residual,
+            aux_loss_coef=0.01,
+        ),
+    )
+
+
+def nlg_dense(name: str, n_layers: int, d_model: int, n_heads: int, vocab: int = 51_200) -> ModelConfig:
+    layer = _dense_layer(4 * d_model)
+    return ModelConfig(
+        name=name,
+        family="dense",
+        source="[GPT-3 recipe, paper Table 1]",
+        d_model=d_model,
+        num_heads=n_heads,
+        num_kv_heads=n_heads,
+        head_dim=d_model // n_heads,
+        vocab_size=vocab,
+        segments=(Segment((layer,), n_layers),),
+        max_seq_len=2048,
+        tie_embeddings=True,
+    )
+
+
+def nlg_moe(
+    name: str,
+    n_layers: int,
+    d_model: int,
+    n_heads: int,
+    experts: int | Tuple[int, int],
+    *,
+    residual: bool = False,
+    vocab: int = 51_200,
+    student_layers: Optional[int] = None,
+) -> ModelConfig:
+    """'Every other FFN layer is MoE' (§3.1).  ``experts`` int -> standard MoE;
+    (lo, hi) -> Pyramid: first half of MoE layers get lo, second half hi.
+    ``student_layers`` trims depth for MoS (layers removed from the top,
+    preserving the dense/MoE interleave)."""
+    d_ff = 4 * d_model
+    total = student_layers or n_layers
+    dense_l = _dense_layer(d_ff)
+
+    if isinstance(experts, int):
+        pattern = (dense_l, _moe_layer(d_ff, experts, residual))
+        reps, rem = divmod(total, 2)
+        segs = [Segment(pattern, reps)]
+        if rem:
+            segs.append(Segment((dense_l,), 1))
+        family = "moe"
+    else:
+        lo, hi = experts
+        # Pyramid (§4.1.2, Fig. 3 & the Pyramid-MoE-32/64 ablation): the *last
+        # two* MoE layers use 2x experts (`hi`), all earlier MoE layers use
+        # `lo`.  This reproduces the paper's parameter counts exactly
+        # (4B / 31B / 3.5B / 27B).
+        n_moe = total // 2
+        n_hi = min(2, n_moe)
+        n_lo = n_moe - n_hi
+        segs = []
+        if n_lo:
+            segs.append(Segment((dense_l, _moe_layer(d_ff, lo, residual)), n_lo))
+        segs.append(Segment((dense_l, _moe_layer(d_ff, hi, residual)), n_hi))
+        rem = total - 2 * n_moe
+        if rem:
+            segs.append(Segment((dense_l,), 1))
+        family = "moe"
+
+    return ModelConfig(
+        name=name,
+        family=family,
+        source="[DeepSpeed-MoE Table 1]",
+        d_model=d_model,
+        num_heads=n_heads,
+        num_kv_heads=n_heads,
+        head_dim=d_model // n_heads,
+        vocab_size=vocab,
+        segments=tuple(segs),
+        max_seq_len=2048,
+        tie_embeddings=True,
+    )
+
+
+# --- The paper's Table 1 / Table 6 model zoo ------------------------------
+
+
+def paper_models() -> dict:
+    m = {}
+    m["nlg-350m"] = nlg_dense("nlg-350m", 24, 1024, 16)
+    m["nlg-1.3b"] = nlg_dense("nlg-1.3b", 24, 2048, 16)
+    m["nlg-6.7b"] = nlg_dense("nlg-6.7b", 32, 4096, 32)
+    m["nlg-350m-moe128"] = nlg_moe("nlg-350m-moe128", 24, 1024, 16, 128)
+    m["nlg-1.3b-moe128"] = nlg_moe("nlg-1.3b-moe128", 24, 2048, 16, 128)
+    m["nlg-350m-prmoe-32-64"] = nlg_moe("nlg-350m-prmoe-32-64", 24, 1024, 16, (32, 64), residual=True)
+    m["nlg-1.3b-prmoe-64-128"] = nlg_moe("nlg-1.3b-prmoe-64-128", 24, 2048, 16, (64, 128), residual=True)
+    # MoS students: depth 24 -> 21 (12.5% reduction, §4.2.2)
+    m["nlg-350m-prmoe-mos"] = nlg_moe(
+        "nlg-350m-prmoe-mos", 24, 1024, 16, (32, 64), residual=True, student_layers=21
+    )
+    m["nlg-1.3b-prmoe-mos"] = nlg_moe(
+        "nlg-1.3b-prmoe-mos", 24, 2048, 16, (64, 128), residual=True, student_layers=21
+    )
+    # Table 6 inference-eval configs (standard MoE):
+    m["nlg-2.4b-moe128"] = nlg_moe("nlg-2.4b-moe128", 16, 3584, 28, 128)
+    # NOTE: Table 6 lists 8B@30L and 24B@40L, but the stated totals (349.0B /
+    # 1064.9B) only reconcile with 8B@40Lx4096 and 24B@30Lx8192 — the layer
+    # counts appear transposed in the paper; we follow the totals.
+    m["nlg-8b-moe128"] = nlg_moe("nlg-8b-moe128", 40, 4096, 32, 128)
+    m["nlg-24b-moe128"] = nlg_moe("nlg-24b-moe128", 30, 8192, 64, 128)
+    m["nlg-47b-moe128"] = nlg_moe("nlg-47b-moe128", 58, 8192, 64, 128)
+    return m

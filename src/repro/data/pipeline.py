@@ -1,0 +1,35 @@
+"""Data pipeline: host-side batch production + device placement with the
+global-batch sharding (batch over ('pod','data')).  Single-process here, but
+written against ``jax.make_array_from_callback`` so a multi-host launcher
+feeds per-host shards identically."""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import batches
+from repro.parallel.sharding import get_mesh, named_sharding
+
+
+def device_put_batch(tokens: np.ndarray, labels: np.ndarray):
+    mesh = get_mesh()
+    if mesh is None:
+        return jnp.asarray(tokens), jnp.asarray(labels)
+    sh = named_sharding("batch", "seq", shape=tokens.shape)
+    mk = lambda arr: jax.make_array_from_callback(arr.shape, sh, lambda idx: arr[idx])
+    return mk(tokens), mk(labels)
+
+
+def data_stream(
+    vocab_size: int,
+    global_batch: int,
+    seq_len: int,
+    *,
+    seed: int = 0,
+    start_step: int = 0,
+) -> Iterator[Tuple[jax.Array, jax.Array]]:
+    for toks, labels in batches(vocab_size, global_batch, seq_len, seed=seed, start_step=start_step):
+        yield device_put_batch(toks, labels)

@@ -1,0 +1,29 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they execute in
+``interpret=True`` mode, which runs the kernel body in Python for
+correctness validation against ref.py.  ``use_pallas_gating()`` returns a
+Gating namedtuple so the kernel drops into core/moe.py transparently.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.gating import Gating
+from repro.kernels.expert_mlp import expert_mlp_kernel
+from repro.kernels.moe_gating import gating_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_gating(logits: jax.Array, top_k: int, capacity: int, *, normalize: bool = True) -> Gating:
+    eidx, w, pos, keep, probs = gating_kernel(
+        logits, top_k, capacity, normalize=normalize, interpret=_interpret()
+    )
+    return Gating(eidx, w, pos, keep, probs)
+
+
+def fused_expert_mlp(xe, wi, wg, wo):
+    return expert_mlp_kernel(xe, wi, wg, wo, interpret=_interpret())

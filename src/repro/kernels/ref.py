@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels (the `ref` side of every
+kernel-vs-reference allclose test)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gating import Gating, top_k_gating
+
+
+def gating_ref(logits: jax.Array, top_k: int, capacity: int) -> Gating:
+    """Oracle for kernels/moe_gating.py — the cumsum formulation with k-major
+    priority (identical to core/gating.py)."""
+    return top_k_gating(logits, top_k, capacity, method="cumsum")
+
+
+def expert_mlp_ref(xe: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array) -> jax.Array:
+    """Oracle for kernels/expert_mlp.py: per-expert SwiGLU grouped GEMM.
+    xe: [E, C, D]; wi/wg: [E, D, F]; wo: [E, F, D] -> [E, C, D]."""
+    h = jnp.einsum("ecd,edf->ecf", xe, wi, preferred_element_type=jnp.float32)
+    g = jnp.einsum("ecd,edf->ecf", xe, wg, preferred_element_type=jnp.float32)
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("ecf,efd->ecd", h.astype(xe.dtype), wo, preferred_element_type=jnp.float32).astype(
+        xe.dtype
+    )

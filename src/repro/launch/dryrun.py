@@ -1,0 +1,164 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and extract roofline terms.  No arrays are allocated —
+inputs are ShapeDtypeStructs with NamedShardings.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.registry import ASSIGNED, get_config  # noqa: E402
+from repro.configs.shapes import SHAPES, shape_applicable  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import analyze, model_flops  # noqa: E402
+from repro.launch.steps import entry_for, input_specs  # noqa: E402
+from repro.parallel.sharding import RULESETS, use_mesh  # noqa: E402
+
+
+def _lower(cfg, shape, mesh, ruleset: str):
+    with use_mesh(mesh, RULESETS[ruleset]):
+        specs = input_specs(cfg, shape, mesh)
+        fn = entry_for(cfg, shape.kind)
+        # Donate the mutated state (params/opt for train, caches for serving)
+        # — production steps buffer-alias these; without donation the dry-run
+        # would double-count cache/optimizer HBM.
+        donate = {"train": (0, 1), "prefill": (2,), "decode": (3,)}[shape.kind]
+        # None args are valid empty pytrees under jit
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*specs["args"])
+    return lowered
+
+
+def dryrun(arch: str, shape_name: str, *, multi_pod: bool = False, ruleset: str = "default",
+           moe_impl: str = None, cap_factor: float = None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    if moe_impl:
+        cfg = cfg.replace(moe_impl=moe_impl)
+    if cap_factor:
+        from repro.configs.registry import with_capacity_factor
+
+        cfg = with_capacity_factor(cfg, cap_factor)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        if verbose:
+            print(f"[skip] {arch} x {shape_name}: {why}")
+        return {"arch": arch, "shape": shape_name, "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": "multi" if multi_pod else "single",
+           "ruleset": ruleset, "chips": chips}
+    t0 = time.time()
+    try:
+        lowered = _lower(cfg, shape, mesh, ruleset)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        from repro.launch.roofline import score_dims_for
+
+        roof = analyze(compiled, chips, score_dims_for(cfg, shape, mesh))
+        mf = model_flops(cfg, shape)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            model_flops=mf,
+            useful_ratio=(mf / roof.flops if roof.flops else 0.0),
+            **roof.as_dict(),
+        )
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = str(ma)
+        except Exception:
+            pass
+        if verbose:
+            print(
+                f"[ok] {arch} x {shape_name} ({rec['mesh']}, {ruleset}): "
+                f"compute {roof.t_compute*1e3:.2f}ms memory {roof.t_memory*1e3:.2f}ms "
+                f"collective {roof.t_collective*1e3:.2f}ms dominant={roof.dominant} "
+                f"useful={rec['useful_ratio']:.2f} hbm_peak={roof.per_device_hbm_peak/2**30:.2f}GiB "
+                f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)"
+            )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[ERROR] {arch} x {shape_name}: {rec['error']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--ruleset", default="default", choices=sorted(RULESETS))
+    ap.add_argument("--moe-impl", default=None, choices=[None, "einsum", "dense", "ep"])
+    ap.add_argument("--cap-factor", type=float, default=None)
+    ap.add_argument("--train-opt", action="append", default=[],
+                    help="enable a steps.TRAIN_OPTS flag (e.g. shard_grads)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.launch.steps import TRAIN_OPTS
+    for opt_name in args.train_opt:
+        if "=" in opt_name:
+            k, v = opt_name.split("=")
+            assert k in TRAIN_OPTS, k
+            TRAIN_OPTS[k] = int(v)
+        else:
+            assert opt_name in TRAIN_OPTS, opt_name
+            TRAIN_OPTS[opt_name] = True
+    if TRAIN_OPTS["bf16_bwd"]:
+        from repro.models.transformer import set_bf16_bwd
+
+        set_bf16_bwd(True)
+    if args.ruleset == "ep_pod":
+        from repro.core.moe_parallel import set_ep_pod
+
+        set_ep_pod(True)
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = dryrun(arch, shape, multi_pod=mp, ruleset=args.ruleset,
+                             moe_impl=args.moe_impl, cap_factor=args.cap_factor)
+                results.append(rec)
+                if args.out:  # checkpoint progress after every pair
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped, {n_err} errors / {len(results)} pairs")
+    if n_err:
+        for r in results:
+            if r["status"] == "error":
+                print(f"  FAILED: {r['arch']} x {r['shape']} ({r['mesh']}): {r['error']}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

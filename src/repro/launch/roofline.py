@@ -1,0 +1,194 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs / (chips × 197e12)
+  memory     = HLO_bytes / (chips × 819e9)
+  collective = collective_bytes / (chips × 50e9)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are NOT
+in cost_analysis — we parse the post-SPMD HLO (``compiled.as_text()``) and sum
+the output-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, attributing per-chip bytes (each collective's
+reported shape is already the per-participant shard in SPMD HLO).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# e.g.:  %x = bf16[8,128,256]{2,1,0} all-to-all(...), replica_groups={{0,1},{2,3}}
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    group_sizes: List[int] = field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(4)
+        if "-done" in line.split("=")[1][:60]:
+            continue
+        if m.group(1) is not None:  # tuple shape
+            nbytes = sum(_shape_bytes(t, d) for t, d in _SHAPE_RE.findall(m.group(1)))
+        else:
+            nbytes = _shape_bytes(m.group(2), m.group(3))
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            stats.group_sizes.append(len(g.group(1).split(",")))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                stats.group_sizes.append(int(gi.group(2)))
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float  # total HLO flops (whole program, all chips)
+    hbm_bytes: float  # cost_analysis 'bytes accessed' (per-chip program)
+    collective_bytes: float  # per-chip collective bytes
+    chips: int
+    per_device_hbm_peak: float  # from memory_analysis
+    stats: CollectiveStats
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.chips / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory, "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "per_device_hbm_peak": self.per_device_hbm_peak,
+            "collectives": {
+                "bytes_by_kind": self.stats.bytes_by_kind,
+                "count_by_kind": self.stats.count_by_kind,
+                "max_group": max(self.stats.group_sizes or [1]),
+            },
+        }
+
+
+def score_dims_for(cfg, shape, mesh) -> set:
+    """KV-length dims identifying attention score tensors (excluded from HBM
+    traffic: VMEM-resident inside the fused flash-attention kernel)."""
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    dims = {shape.seq_len, shape.seq_len // tp}
+    from repro.configs.base import AttnSpec
+
+    specs = list(cfg.layer_specs())
+    if cfg.encoder is not None:
+        for seg in cfg.encoder.segments:
+            specs.extend(seg.pattern)
+    for ls in specs:
+        for m in (ls.mixer, ls.cross):
+            if isinstance(m, AttnSpec) and m.window:
+                w_pad = -(-m.window // 1024) * 1024
+                dims.update({m.window, w_pad, w_pad + 1024, min(m.window, shape.seq_len)})
+    if cfg.frontend is not None:
+        dims.add(cfg.frontend.n_tokens)
+    return {d for d in dims if d >= 512}
+
+
+def analyze(compiled, chips: int, score_dims: set = frozenset()) -> Roofline:
+    """Roofline terms via trip-count-aware HLO accounting (hlo_account.py).
+    XLA's cost_analysis counts while bodies once, so scan-over-layers models
+    would be undercounted by ~the layer count; we parse the scheduled HLO and
+    multiply loop bodies by their known_trip_count instead."""
+    from repro.launch.hlo_account import account
+
+    acct = account(compiled.as_text(), score_dims)
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(
+            getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0)
+        )
+    except Exception:
+        peak = float("nan")
+    stats = CollectiveStats(
+        bytes_by_kind={k: int(v) for k, v in acct.coll_bytes.items()},
+        count_by_kind=dict(acct.coll_count),
+        group_sizes=list(acct.group_sizes),
+    )
+    return Roofline(
+        flops=acct.flops * chips,  # per-chip dot flops -> global
+        hbm_bytes=acct.traffic,  # per-chip traffic proxy (operands+outputs)
+        collective_bytes=float(stats.total_bytes),
+        chips=chips,
+        per_device_hbm_peak=peak,
+        stats=stats,
+    )
+
+
+def model_flops(cfg, shape, *, active: bool = True) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference (N = activated
+    params for MoE — the paper's critical-path measure)."""
+    from repro.configs.base import count_active_params, count_params
+
+    n = count_active_params(cfg) if active else count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per row

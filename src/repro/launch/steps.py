@@ -1,0 +1,255 @@
+"""Lowered entry points + abstract input specs for the multi-pod dry-run.
+
+For every (architecture × input shape) pair this module provides:
+  * ``entry_fn(cfg, kind)``    — the function that gets jitted/lowered
+                                 (train_step / prefill_step / decode_step)
+  * ``input_specs(cfg, shape, mesh)`` — ShapeDtypeStruct stand-ins with
+                                 NamedShardings attached (no allocation).
+
+Train steps are full fwd+bwd+AdamW updates (remat'd scan).  Decode shapes
+lower ``decode_step`` with a pre-existing KV cache of shape.seq_len per
+DESIGN.md §6 (window layers hold ring caches; SSM/LRU hold O(1) state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, count_params
+from repro.configs.shapes import InputShape
+from repro.models.model import decode_step, encode, forward, init_caches, init_params
+from repro.parallel.params import batch_pspec, cache_pspecs, param_pspecs
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
+from repro.training.schedule import warmup_cosine
+from repro.training.trainer import cross_entropy, moe_aux_coef
+
+# Parameter budget above which optimizer moments are kept in bf16 (a 1T-param
+# model's f32 m/v would not fit 512 x 16 GB; bf16 moments are standard
+# large-scale practice — recorded as a deliberate deviation in DESIGN.md §9).
+_BF16_OPT_THRESHOLD = 2e11
+
+
+def opt_dtype_for(cfg: ModelConfig):
+    return jnp.bfloat16 if count_params(cfg) > _BF16_OPT_THRESHOLD else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Entry functions
+# ---------------------------------------------------------------------------
+
+
+# Perf-iteration toggles (EXPERIMENTS.md §Perf); set via dryrun --train-opt.
+TRAIN_OPTS = {
+    # Constrain per-microbatch grads to the (ZeRO-)sharded accumulator layout
+    # so GSPMD emits reduce-scatter per microbatch instead of a full
+    # all-reduce followed by a dynamic-slice.
+    "shard_grads": False,
+    # Cast residual-stream cotangents back to bf16 at layer boundaries
+    # (models/transformer.BF16_BWD) — see grad_cast in models/modules.py.
+    # NOTE: on the CPU dry-run backend this is invisible in HLO (XLA CPU
+    # float-normalization promotes every bf16 op to f32); verified at JAX
+    # level by tests/test_training.py::test_grad_cast_dtype.
+    "bf16_bwd": False,
+    # Gradient-accumulation depth: each microbatch re-gathers the ZeRO-3
+    # sharded params, so fewer microbatches = less all-gather traffic at the
+    # cost of a larger activation working set.
+    "accum_steps": 8,
+}
+
+
+def make_train_entry(cfg: ModelConfig, *, remat: bool = True, accum_steps: int = None):
+    if accum_steps is None:
+        accum_steps = TRAIN_OPTS["accum_steps"]
+    """Full train step: grad accumulation over ``accum_steps`` microbatches
+    (keeps per-device activation memory bounded at 4k seq × 256 batch), then
+    one AdamW update.  Gradients accumulate in f32."""
+    opt = AdamWConfig(lr=1e-4)
+
+    def loss_fn(p, mb):
+        memory = encode(cfg, p, mb["source"]) if "source" in mb else None
+        logits, aux = forward(
+            cfg, p, mb["tokens"], memory=memory,
+            prefix_embeds=mb.get("prefix"), remat=remat,
+        )
+        if "prefix" in mb:
+            logits = logits[:, mb["prefix"].shape[1] :]
+        ce = cross_entropy(logits, mb["labels"])
+        return ce + moe_aux_coef(cfg) * aux, {"ce": ce, "aux": aux}
+
+    def train_step(params, opt_state: AdamWState, batch: dict):
+        gb = next(iter(batch.values())).shape[0]
+        A = accum_steps if (accum_steps > 1 and gb % accum_steps == 0) else 1
+        if A > 1:
+            mbs = jax.tree.map(lambda x: x.reshape((A, gb // A) + x.shape[1:]), batch)
+
+            adt = opt_dtype_for(cfg)  # f32 accum; bf16 for ≳200B-param models
+
+            gspecs = None
+            if TRAIN_OPTS["shard_grads"]:
+                from repro.parallel.params import param_pspecs
+                from repro.parallel.sharding import get_mesh
+
+                mesh = get_mesh()
+                if mesh is not None:
+                    from jax.sharding import NamedSharding
+
+                    pspecs = param_pspecs(mesh, params, mode="train")
+                    gspecs = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+            def body(acc, mb):
+                g_acc, loss_acc = acc
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                if gspecs is not None:
+                    g = jax.tree.map(jax.lax.with_sharding_constraint, g, gspecs)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(adt), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            (grads, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / A, grads)
+            loss = loss_sum / A
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        lr_scale = warmup_cosine(opt_state.step, warmup_steps=100, decay_steps=10_000)
+        params, opt_state, stats = adamw_update(opt, grads, opt_state, params, lr_scale)
+        return params, opt_state, dict(metrics, loss=loss, **stats)
+
+    return train_step
+
+
+def make_prefill_entry(cfg: ModelConfig):
+    from repro.models.model import prefill
+
+    def prefill_step(params, tokens, caches, memory=None, prefix=None):
+        return prefill(cfg, params, tokens, caches, memory=memory, prefix_embeds=prefix)
+
+    return prefill_step
+
+
+def make_decode_entry(cfg: ModelConfig):
+    def decode_one(params, token, index, caches, memory=None):
+        return decode_step(cfg, params, token, index, caches, memory=memory)
+
+    return decode_one
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs with shardings
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _tree_sds(shapes_tree, pspecs_tree, mesh):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        shapes_tree,
+        pspecs_tree,
+    )
+
+
+def abstract_params(cfg: ModelConfig, mesh, *, mode: str = "serve"):
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    return _tree_sds(shapes, param_pspecs(mesh, shapes, mode=mode), mesh)
+
+
+def abstract_opt_state(cfg: ModelConfig, params_sds, mesh):
+    odt = opt_dtype_for(cfg)
+    cast = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, odt, sharding=s.sharding), t
+    )
+    m = cast(params_sds)
+    v = cast(params_sds)
+    step = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return AdamWState(step, m, v)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, capacity: int, mesh, *, cross_len: int = 0):
+    shapes = jax.eval_shape(lambda: init_caches(cfg, batch, capacity, cross_len=cross_len))
+    return _tree_sds(shapes, cache_pspecs(mesh, shapes, batch), mesh)
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.family == "vlm" and cfg.frontend is not None:
+        return max(seq_len - cfg.frontend.n_tokens, 1)
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
+    """Abstract inputs for the entry of ``shape.kind``.  Returns a dict of
+    kwargs-by-position used by dryrun.py."""
+    GB, S = shape.global_batch, shape.seq_len
+    bspec = batch_pspec(mesh, 2, batch_divisible=_batch_divisible(mesh, GB))
+    tok = lambda s: _sds((GB, s), jnp.int32, mesh, bspec)
+
+    out = {}
+    if shape.kind == "train":
+        st = _text_len(cfg, S)
+        batch = {"tokens": tok(st), "labels": tok(st)}
+        if cfg.family == "vlm":
+            fe = cfg.frontend
+            batch["prefix"] = _sds(
+                (GB, fe.n_tokens, fe.embed_dim), jnp.bfloat16, mesh,
+                batch_pspec(mesh, 3, batch_divisible=_batch_divisible(mesh, GB)),
+            )
+        if cfg.family == "encdec":
+            fe = cfg.frontend
+            batch["source"] = _sds(
+                (GB, fe.n_tokens, fe.embed_dim), jnp.bfloat16, mesh,
+                batch_pspec(mesh, 3, batch_divisible=_batch_divisible(mesh, GB)),
+            )
+        params = abstract_params(cfg, mesh, mode="train")
+        out["args"] = (params, abstract_opt_state(cfg, params, mesh), batch)
+    elif shape.kind == "prefill":
+        st = _text_len(cfg, S)
+        params = abstract_params(cfg, mesh)
+        caches = abstract_caches(
+            cfg, GB, S, mesh, cross_len=(cfg.frontend.n_tokens if cfg.family == "encdec" else 0)
+        )
+        memory = None
+        prefix = None
+        if cfg.family == "encdec":
+            fe = cfg.frontend
+            memory = _sds((GB, fe.n_tokens, cfg.d_model), jnp.bfloat16, mesh,
+                          batch_pspec(mesh, 3, batch_divisible=_batch_divisible(mesh, GB)))
+        if cfg.family == "vlm":
+            fe = cfg.frontend
+            prefix = _sds((GB, fe.n_tokens, fe.embed_dim), jnp.bfloat16, mesh,
+                          batch_pspec(mesh, 3, batch_divisible=_batch_divisible(mesh, GB)))
+        out["args"] = (params, tok(st), caches, memory, prefix)
+    else:  # decode
+        params = abstract_params(cfg, mesh)
+        caches = abstract_caches(
+            cfg, GB, S, mesh, cross_len=(cfg.frontend.n_tokens if cfg.family == "encdec" else 0)
+        )
+        memory = None
+        if cfg.family == "encdec":
+            fe = cfg.frontend
+            memory = _sds((GB, fe.n_tokens, cfg.d_model), jnp.bfloat16, mesh,
+                          batch_pspec(mesh, 3, batch_divisible=_batch_divisible(mesh, GB)))
+        token = _sds((GB, 1), jnp.int32, mesh, batch_pspec(mesh, 2, batch_divisible=_batch_divisible(mesh, GB)))
+        index = _sds((), jnp.int32, mesh, P())
+        out["args"] = (params, token, index, caches, memory)
+    return out
+
+
+def _batch_divisible(mesh, batch: int) -> bool:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("pod", 1) * sizes.get("data", 1)
+    return batch % dp == 0
+
+
+def entry_for(cfg: ModelConfig, kind: str):
+    if kind == "train":
+        return make_train_entry(cfg)
+    if kind == "prefill":
+        return make_prefill_entry(cfg)
+    return make_decode_entry(cfg)

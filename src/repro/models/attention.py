@@ -1,0 +1,312 @@
+"""GQA attention with global / sliding-window / cross variants, KV caches
+(full and ring-buffer window), and query-chunked computation so 32k-prefill
+fits device memory and *local* layers cost O(S·W) FLOPs rather than O(S²).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnSpec, ModelConfig
+from repro.models.modules import apply_rope, dense_init, init_rmsnorm, rmsnorm, softcap
+from repro.parallel.sharding import shard_hint
+
+NEG_INF = -1e30
+
+# Query-chunk size for long-sequence attention (multiple of 128 for MXU).
+Q_CHUNK = 1024
+
+
+def _context_parallel_size(cfg) -> int:
+    """>1 when attention must be distributed over 'model' via the query
+    sequence because the head count doesn't divide the TP axis."""
+    from repro.parallel.sharding import get_mesh
+
+    mesh = get_mesh()
+    if mesh is None:
+        return 1
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if tp > 1 and cfg.num_heads % tp != 0:
+        return tp
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, spec: AttnSpec, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    H, Hkv, dh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], d, (H, dh), dtype),
+        "wk": dense_init(ks[1], d, (Hkv, dh), dtype),
+        "wv": dense_init(ks[2], d, (Hkv, dh), dtype),
+        "wo": dense_init(ks[3], H * dh, d, dtype).reshape(H, dh, d),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh, dtype)
+        p["k_norm"] = init_rmsnorm(dh, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int, dtype) -> dict:
+    """Ring-buffer KV cache.  ``pos`` holds the absolute position stored in
+    each slot (-1 = empty), which doubles as the validity/window mask source.
+    A full-context cache is simply capacity == max_seq_len."""
+    return {
+        "k": jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def _cache_write_decode(cache: dict, k_new, v_new, index) -> dict:
+    """Write one token per row at ring slot ``index % capacity``.
+    index: [] int32 (uniform batch) or [B] int32 (ragged / continuous
+    batching — each row at its own position)."""
+    cap = cache["k"].shape[1]
+    B = cache["k"].shape[0]
+    if jnp.ndim(index) == 0:
+        slot = jnp.mod(index, cap)
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+        pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.broadcast_to(index, (B, 1)).astype(jnp.int32), slot, axis=1
+        )
+        return {"k": k, "v": v, "pos": pos}
+    # ragged: per-row batch-indexed scatter
+    rows = jnp.arange(B)
+    slot = jnp.mod(index.astype(jnp.int32), cap)  # [B]
+    k = cache["k"].at[rows, slot].set(k_new[:, 0])
+    v = cache["v"].at[rows, slot].set(v_new[:, 0])
+    pos = cache["pos"].at[rows, slot].set(index.astype(jnp.int32))
+    return {"k": k, "v": v, "pos": pos}
+
+
+def _cache_write_prefill(cache: dict, k, v, positions) -> dict:
+    """Fill the cache from a prefill of S tokens (positions [B, S]).  If the
+    cache is a window ring (capacity < S) only the last ``capacity`` tokens
+    are retained, laid out so slot == pos % capacity."""
+    cap = cache["k"].shape[1]
+    S = k.shape[1]
+    if cap >= S:
+        k_ = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+        v_ = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+        pos_ = jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions.astype(jnp.int32), 0, axis=1)
+        return {"k": k_, "v": v_, "pos": pos_}
+    # keep last `cap` tokens; place token p at slot p % cap
+    k_tail = k[:, S - cap :]
+    v_tail = v[:, S - cap :]
+    p_tail = positions[:, S - cap :].astype(jnp.int32)
+    slots = jnp.mod(p_tail[0], cap)  # same for every batch row
+    order = jnp.argsort(slots)
+    return {
+        "k": k_tail[:, order],
+        "v": v_tail[:, order],
+        "pos": p_tail[:, order],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product with GQA + masking
+# ---------------------------------------------------------------------------
+
+
+def _sdpa(q, k, v, mask, scale: float, cap: float):
+    """q: [B,S,H,dh], k/v: [B,T,Hkv,dh], mask: [B,1,1,S,T] or broadcastable.
+    Returns [B,S,H,dh].  Softmax in f32."""
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32)
+    logits = logits * scale
+    logits = softcap(logits, cap)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H, dh)
+
+
+def _window_causal_mask(q_pos, k_pos, window: int, causal: bool):
+    """q_pos: [B,S] or [S]; k_pos: [B,T] or [T] -> bool [B,1,1,S,T]."""
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None]
+    q = q_pos[:, :, None]  # [B,S,1]
+    k = k_pos[:, None, :]  # [B,1,T]
+    m = k >= 0  # slot validity (ring caches store -1 for empty)
+    if causal:
+        m = m & (k <= q)
+    if window > 0:
+        m = m & (q - k < window)
+    return m[:, None, None]  # [B,1,1,S,T]
+
+
+def attend_full(q, k, v, q_pos, k_pos, spec: AttnSpec, scale: float):
+    mask = _window_causal_mask(q_pos, k_pos, spec.window if spec.kind == "local" else 0, spec.causal)
+    return _sdpa(q, k, v, mask, scale, spec.logit_softcap)
+
+
+def attend_chunked(q, k, v, q_pos, k_pos, spec: AttnSpec, scale: float, q_chunk: int = Q_CHUNK):
+    """Query-chunked attention.  For local layers each query chunk only reads
+    the K/V slice [chunk_start - window, chunk_end), so HLO FLOPs are O(S·W)."""
+    B, S, H, dh = q.shape
+    if S <= q_chunk or S % q_chunk != 0:
+        return attend_full(q, k, v, q_pos, k_pos, spec, scale)
+    n_chunks = S // q_chunk
+    local = spec.kind == "local" and spec.window > 0
+    if local:
+        # k-slice length: window rounded up to chunk multiple + chunk
+        w_pad = ((spec.window + q_chunk - 1) // q_chunk) * q_chunk
+        k_len = w_pad + q_chunk
+
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (B, S))
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None], (B, k.shape[1]))
+
+    def body(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, i * q_chunk, q_chunk, axis=1)
+        if local:
+            start = jnp.maximum(i * q_chunk - w_pad, 0)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, k_len, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, k_len, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, start, k_len, axis=1)
+            # dynamic_slice clamps at the end; mask handles any overlap dupes
+            # because positions beyond the causal frontier are masked anyway.
+            mask = _window_causal_mask(qp, kp, spec.window, spec.causal)
+        else:
+            ks, vs, kp = k, v, k_pos
+            mask = _window_causal_mask(qp, kp, 0, spec.causal)
+        return _sdpa(qs, ks, vs, mask, scale, spec.logit_softcap)
+
+    out = jax.lax.map(body, jnp.arange(n_chunks))  # [n, B, c, H, dh]
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, dh)
+
+
+# ---------------------------------------------------------------------------
+# Layer-level apply
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    cfg: ModelConfig,
+    spec: AttnSpec,
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    memory: Optional[jax.Array] = None,
+    memory_positions: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,
+    mode: str = "train",
+):
+    """Returns (y, new_cache).  mode: train | prefill | decode.
+
+    - train:   full self-attention over x (no cache IO).
+    - prefill: same as train but also fills and returns the cache.
+    - decode:  x is [B, 1, d]; reads cache, writes the new token into it.
+    - cross (spec.kind == 'cross'): attends to ``memory`` (no cache mutation
+      for train; serving caches projected memory K/V once at prefill).
+    """
+    B, S, d = x.shape
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    scale = 1.0 / math.sqrt(dh)
+
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    if spec.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.rms_eps)
+
+    if spec.kind == "cross":
+        if cache is not None and mode.startswith("decode"):
+            k, v = cache["k"], cache["v"]
+            k_pos = cache["pos"]
+        else:
+            assert memory is not None
+            k = jnp.einsum("btd,dhe->bthe", memory, params["wk"])
+            v = jnp.einsum("btd,dhe->bthe", memory, params["wv"])
+            if spec.qk_norm:
+                k = rmsnorm(params["k_norm"], k, cfg.rms_eps)
+            k_pos = (
+                memory_positions
+                if memory_positions is not None
+                else jnp.arange(k.shape[1], dtype=jnp.int32)[None]
+            )
+        mask = _window_causal_mask(
+            jnp.zeros((B, S), jnp.int32), jnp.broadcast_to(k_pos, (B, k.shape[1])), 0, causal=False
+        )
+        y = _sdpa(q, k, v, mask, scale, spec.logit_softcap)
+        new_cache = (
+            {"k": k, "v": v, "pos": jnp.broadcast_to(k_pos, (B, k.shape[1])).astype(jnp.int32)}
+            if mode == "prefill"
+            else cache
+        )
+        out = jnp.einsum("bshe,hed->bsd", y, params["wo"])
+        return out, new_cache
+
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"])
+    if spec.qk_norm:
+        k = rmsnorm(params["k_norm"], k, cfg.rms_eps)
+    if spec.use_rope:
+        q = apply_rope(q, positions, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_theta)
+    q = shard_hint(q, "batch", "seq", "heads", "head_dim")
+    k = shard_hint(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard_hint(v, "batch", "seq", "kv_heads", "head_dim")
+
+    # Context-parallel fallback: heads that don't divide the TP axis would
+    # leave attention replicated across 'model' ranks (16x redundant compute
+    # and score traffic).  Shard the *query sequence* over 'model' instead;
+    # K/V stay replicated across TP (each rank attends its S/L query slice
+    # against the full keys).
+    cp = _context_parallel_size(cfg)
+    if cp > 1 and mode != "decode" and S % cp == 0:
+        q = shard_hint(q, "batch", "q_seq", None, None)
+
+    if mode.startswith("decode"):
+        assert cache is not None and S == 1
+        # positions: [B, 1]; mode == "decode" assumes a uniform batch index
+        # (dynamic-update-slice — partitions best under GSPMD);
+        # "decode_ragged" supports per-row positions (continuous batching).
+        row_pos = positions[:, 0] if positions.ndim == 2 else positions
+        row_pos = jnp.broadcast_to(row_pos, (B,)).astype(jnp.int32)
+        idx = row_pos if mode == "decode_ragged" else row_pos[0]
+        new_cache = _cache_write_decode(cache, k, v, idx)
+        mask = _window_causal_mask(
+            row_pos[:, None],
+            new_cache["pos"],
+            spec.window if spec.kind == "local" else 0,
+            spec.causal,
+        )
+        y = _sdpa(q, new_cache["k"], new_cache["v"], mask, scale, spec.logit_softcap)
+    else:
+        pos2d = positions if positions.ndim == 2 else positions[None]
+        pos2d = jnp.broadcast_to(pos2d, (B, S))
+        if cp > 1 and S % cp == 0:
+            # keep the q-seq sharding intact (query chunking would slice
+            # across shard boundaries and force gathers)
+            y = attend_full(q, k, v, pos2d, pos2d, spec, scale)
+        else:
+            y = attend_chunked(q, k, v, pos2d, pos2d, spec, scale)
+        new_cache = _cache_write_prefill(cache, k, v, pos2d) if (mode == "prefill" and cache is not None) else cache
+
+    if cp > 1 and mode != "decode" and S % cp == 0:
+        y = shard_hint(y, "batch", "q_seq", None, None)
+    else:
+        y = shard_hint(y, "batch", "seq", "heads", "head_dim")
+    out = jnp.einsum("bshe,hed->bsd", y, params["wo"])
+    return out, new_cache

@@ -1,0 +1,246 @@
+"""Top-level model: embeddings -> segments -> final norm -> logits.
+
+Entry points used by training / serving / dry-run:
+
+  * ``forward``      — teacher-forced logits (training / eval)
+  * ``prefill``      — forward + build caches
+  * ``decode_step``  — one token with caches
+  * ``encode``       — encoder stack (enc-dec models)
+
+Frontend-stub models (audio/vlm): callers pass precomputed frame/patch
+embeddings (see ``FrontendSpec``); a learned projector maps them to d_model
+and they are prepended to the token embeddings (vlm) or fed to the encoder
+(audio enc-dec).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.modules import dense_init, embed_init, init_rmsnorm, rmsnorm
+from repro.models.transformer import apply_segment, init_segment, init_segment_cache
+from repro.parallel.sharding import shard_hint
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": init_rmsnorm(cfg.d_model, dt),
+        "segments": {
+            f"seg{i}": init_segment(jax.random.fold_in(ks[1], i), cfg, seg, dt)
+            for i, seg in enumerate(cfg.segments)
+        },
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = embed_init(ks[2], cfg.vocab_size, cfg.d_model, dt).T  # [D, V]
+    if cfg.encoder is not None:
+        p["encoder"] = {
+            "segments": {
+                f"seg{i}": init_segment(jax.random.fold_in(ks[3], i), cfg, seg, dt)
+                for i, seg in enumerate(cfg.encoder.segments)
+            },
+            "final_norm": init_rmsnorm(cfg.d_model, dt),
+        }
+    if cfg.frontend is not None:
+        p["frontend_proj"] = dense_init(ks[4], cfg.frontend.embed_dim, cfg.d_model, dt)
+    return p
+
+
+def init_caches(cfg: ModelConfig, batch: int, capacity: int, *, cross_len: int = 0) -> dict:
+    dt = _dtype(cfg.param_dtype)
+    return {
+        f"seg{i}": init_segment_cache(cfg, seg, batch, capacity, dt, cross_len=cross_len)
+        for i, seg in enumerate(cfg.segments)
+    }
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = params["embed"][tokens]  # [B, S, D]
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)  # gemma-style scale
+    return shard_hint(x, "batch", "seq", "embed")
+
+
+def logits_out(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return shard_hint(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Encoder (enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ModelConfig, params: dict, source: jax.Array) -> jax.Array:
+    """source: [B, T, frontend.embed_dim] (stubbed frontend embeddings) or
+    token ids [B, T] if no frontend."""
+    if cfg.frontend is not None and source.ndim == 3:
+        x = source.astype(_dtype(cfg.compute_dtype)) @ params["frontend_proj"]
+    else:
+        x = embed_tokens(cfg, params, source)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+    enc = params["encoder"]
+    for i, seg in enumerate(cfg.encoder.segments):
+        x, _, _ = apply_segment(cfg, seg, enc["segments"][f"seg{i}"], x, pos, mode="train")
+    return rmsnorm(enc["final_norm"], x, cfg.rms_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder / LM entry points
+# ---------------------------------------------------------------------------
+
+
+def _run_segments(cfg, params, x, positions, caches, mode, memory, remat):
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    for i, seg in enumerate(cfg.segments):
+        c = caches.get(f"seg{i}") if caches is not None else None
+        x, c_new, a = apply_segment(
+            cfg, seg, params["segments"][f"seg{i}"], x, positions,
+            caches=c, mode=mode, memory=memory, remat=remat,
+        )
+        aux = aux + a
+        if caches is not None:
+            new_caches[f"seg{i}"] = c_new
+    return x, (new_caches if caches is not None else None), aux
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # [B, S] int32
+    *,
+    positions: Optional[jax.Array] = None,
+    memory: Optional[jax.Array] = None,
+    prefix_embeds: Optional[jax.Array] = None,  # vlm patch embeddings [B, P, De]
+    remat: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced logits [B, S(+P), V]; returns (logits, aux_loss)."""
+    x = embed_tokens(cfg, params, tokens)
+    if prefix_embeds is not None:
+        pre = prefix_embeds.astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([pre, x], axis=1)
+    S = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None]
+    x, _, aux = _run_segments(cfg, params, x, positions, None, "train", memory, remat)
+    return logits_out(cfg, params, x), aux
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    caches: dict,
+    *,
+    memory: Optional[jax.Array] = None,
+    prefix_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """Returns (logits for the last position [B, V], filled caches)."""
+    x = embed_tokens(cfg, params, tokens)
+    if prefix_embeds is not None:
+        pre = prefix_embeds.astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([pre, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+    x, new_caches, _ = _run_segments(cfg, params, x, positions, caches, "prefill", memory, False)
+    logits = logits_out(cfg, params, x[:, -1:])[:, 0]
+    return logits, new_caches
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    token: jax.Array,  # [B, 1] int32
+    index: jax.Array,  # [] int32 — current absolute position
+    caches: dict,
+    *,
+    memory: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """One decode step: returns (logits [B, V], updated caches)."""
+    x = embed_tokens(cfg, params, token)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(index.astype(jnp.int32), (B, 1))
+    x, new_caches, _ = _run_segments(cfg, params, x, positions, caches, "decode", memory, False)
+    logits = logits_out(cfg, params, x)[:, 0]
+    return logits, new_caches
+
+
+def ragged_decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    token: jax.Array,  # [B, 1] int32
+    positions: jax.Array,  # [B] int32 — PER-ROW absolute position
+    active: jax.Array,  # [B] bool — rows with live requests
+    caches: dict,
+    *,
+    memory: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """Continuous-batching decode tick: each slot/row decodes at its own
+    position; inactive rows' caches are left untouched (masked merge)."""
+    x = embed_tokens(cfg, params, token)
+    pos2d = positions.astype(jnp.int32)[:, None]
+    x, new_caches, _ = _run_segments(
+        cfg, params, x, pos2d, caches, "decode_ragged", memory, False
+    )
+    logits = logits_out(cfg, params, x)[:, 0]
+
+    def _merge(new, old):
+        # cache leaves: [layers, B, ...] — select on the batch axis
+        mask = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+        return jnp.where(mask, new, old)
+
+    merged = jax.tree.map(_merge, new_caches, caches)
+    return logits, merged
+
+
+def prefill_into_slot(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # [1, S] int32 — a single request's prompt
+    positions: jax.Array,  # [1, S] int32
+    slot: jax.Array,  # [] int32 — batch row in the pooled caches
+    caches: dict,
+    *,
+    memory: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """Prefill one request and write its cache state into row ``slot`` of the
+    pooled slot caches (continuous batching admission)."""
+    x = embed_tokens(cfg, params, tokens)
+    one_caches = init_caches(cfg, 1, _pool_capacity(caches))
+    x, filled, _ = _run_segments(cfg, params, x, positions, one_caches, "prefill", memory, False)
+    logits = logits_out(cfg, params, x[:, -1:])[:, 0]
+
+    def _write(pool, one):
+        return jax.lax.dynamic_update_slice_in_dim(pool, one.astype(pool.dtype), slot, axis=1)
+
+    merged = jax.tree.map(_write, caches, filled)
+    return logits, merged
+
+
+def _pool_capacity(caches: dict) -> int:
+    """Original capacity the pooled caches were built with: the largest KV
+    seq dim across layers (window layers hold smaller rings)."""
+    caps = [leaf.shape[2] for leaf in jax.tree.leaves(caches) if leaf.ndim == 5]
+    return max(caps) if caps else 1

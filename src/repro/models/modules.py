@@ -1,0 +1,135 @@
+"""Primitive neural-net modules in pure JAX: params are nested dicts, every
+module is an ``init_*`` / ``apply`` function pair.  No framework dependency."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_shape, dtype) -> jax.Array:
+    """Truncated-normal fan-in init (matches Megatron/GPT-3 recipes)."""
+    shape = (in_dim,) + tuple(out_shape) if isinstance(out_shape, (tuple, list)) else (in_dim, out_shape)
+    std = 1.0 / np.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype) -> dict:
+    return {"scale": jnp.zeros((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {"gelu": jax.nn.gelu, "relu": jax.nn.relu, "silu": jax.nn.silu, "swiglu": jax.nn.silu}[name]
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN): SwiGLU / GELU / ReLU
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], d_model, d_ff, dtype), "wo": dense_init(ks[1], d_ff, d_model, dtype)}
+    if act == "swiglu":
+        p["wg"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, act: str) -> jax.Array:
+    h = x @ params["wi"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * h
+    else:
+        h = act_fn(act)(h)
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # [dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    sin = jnp.sin(angles)[..., None, :]  # [..., S, 1, dh/2]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Softcap (gemma) and misc
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# bf16 backward pass (EXPERIMENTS.md §Perf): JAX's VJP promotes cotangents to
+# f32 as soon as an f32 loss head is involved, and the f32 activation
+# gradients then flow through every layer's collectives and HBM traffic at
+# twice the bytes.  ``grad_cast`` is an identity whose backward casts the
+# cotangent to the primal dtype (the standard mixed-precision recipe).
+# ---------------------------------------------------------------------------
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_cast(x: jax.Array, dtype_str: str) -> jax.Array:
+    return x
+
+
+def _grad_cast_fwd(x, dtype_str):
+    return x, None
+
+
+def _grad_cast_bwd(dtype_str, _res, g):
+    return (g.astype(dtype_str),)
+
+
+_grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+def grad_cast(x: jax.Array) -> jax.Array:
+    return _grad_cast(x, str(x.dtype))

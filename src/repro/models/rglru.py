@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+Linear recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) with
+input-dependent gates; computed with ``jax.lax.associative_scan`` (parallel,
+O(L log L)) for train/prefill and an O(1) step for decode.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LRUSpec, ModelConfig
+from repro.models.modules import dense_init
+
+C_EXP = 8.0  # Griffin's fixed exponent scaling
+
+
+def init_lru(key, cfg: ModelConfig, spec: LRUSpec, dtype) -> dict:
+    d, w, h = cfg.d_model, spec.lru_width, spec.num_heads
+    bw = w // h
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(ks[0], d, w, dtype),
+        "in_gate": dense_init(ks[1], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (spec.conv_dim, w), jnp.float32) * 0.1).astype(dtype),
+        # block-diagonal gates: [H, bw, bw]
+        "w_input_gate": (jax.random.normal(ks[3], (h, bw, bw), jnp.float32) / jnp.sqrt(bw)).astype(dtype),
+        "b_input_gate": jnp.zeros((h, bw), dtype),
+        "w_forget_gate": (jax.random.normal(ks[4], (h, bw, bw), jnp.float32) / jnp.sqrt(bw)).astype(dtype),
+        "b_forget_gate": jnp.zeros((h, bw), dtype),
+        # Lambda parametrizes a = sigmoid(Lambda) in (0, 1); init near 0.9-0.999
+        "Lambda": jnp.linspace(2.2, 6.9, w).astype(jnp.float32),
+        "out_proj": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def init_lru_cache(batch: int, spec: LRUSpec, dtype) -> dict:
+    return {
+        "state": jnp.zeros((batch, spec.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_dim - 1, spec.lru_width), dtype),
+        "pos": jnp.zeros((batch, 1), jnp.int32),
+    }
+
+
+def _block_diag(xh: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """xh: [B,S,H,bw] @ w: [H,bw,bw] + b -> [B,S,H,bw]."""
+    return jnp.einsum("bshi,hij->bshj", xh, w) + b
+
+
+def _gates(params, x, h: int):
+    B, S, W = x.shape
+    bw = W // h
+    xh = x.reshape(B, S, h, bw)
+    i_t = jax.nn.sigmoid(_block_diag(xh, params["w_input_gate"], params["b_input_gate"]))
+    r_t = jax.nn.sigmoid(_block_diag(xh, params["w_forget_gate"], params["b_forget_gate"]))
+    i_t = i_t.reshape(B, S, W).astype(jnp.float32)
+    r_t = r_t.reshape(B, S, W).astype(jnp.float32)
+    log_a = -C_EXP * r_t * jax.nn.softplus(params["Lambda"])  # log a_t <= 0
+    a = jnp.exp(log_a)
+    multiplier = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, multiplier * i_t * x.astype(jnp.float32)
+
+
+def lru_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None):
+    """h_t = a_t h_{t-1} + b_t over axis 1 via associative scan."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh
+
+
+def lru_layer(
+    cfg: ModelConfig,
+    spec: LRUSpec,
+    params: dict,
+    x: jax.Array,  # [B,S,D]
+    *,
+    cache: Optional[dict] = None,
+    mode: str = "train",
+) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    gate = jax.nn.gelu(x @ params["in_gate"])  # [B,S,W]
+    xb = x @ params["in_x"]
+
+    prefix = cache["conv"] if (cache is not None and mode.startswith("decode")) else None
+    from repro.models.ssm import _causal_conv
+
+    xb, new_prefix = _causal_conv(xb, params["conv_w"], prefix)
+
+    a, b = _gates(params, xb, spec.num_heads)  # [B,S,W] f32 each
+
+    if mode.startswith("decode") and S == 1:
+        h0 = cache["state"]
+        h = a[:, 0] * h0 + b[:, 0]
+        hs = h[:, None]
+        final = h
+    else:
+        h0 = cache["state"] if (cache is not None and mode.startswith("decode")) else None
+        hs = lru_scan(a, b, h0)
+        final = hs[:, -1]
+
+    y = (hs.astype(x.dtype) * gate) @ params["out_proj"]
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": final.astype(jnp.float32), "conv": new_prefix.astype(cache["conv"].dtype), "pos": cache["pos"] + S}
+    return y, new_cache

@@ -1,0 +1,228 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm (quadratic within a chunk,
+linear across chunks); decode is the O(1)-per-token recurrence on the
+[B, H, P, N] state.  A naive sequential-scan oracle is provided for tests.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMSpec
+from repro.models.modules import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_ssm(key, cfg: ModelConfig, spec: SSMSpec, dtype) -> dict:
+    d = cfg.d_model
+    di, g, n, h = spec.d_inner, spec.n_groups, spec.state_dim, spec.num_heads
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * g * n + h  # z, x, B, C, dt
+    conv_ch = di + 2 * g * n
+    return {
+        "in_proj": dense_init(ks[0], d, in_dim, dtype),
+        "conv_w": (jax.random.normal(ks[1], (spec.conv_dim, conv_ch), jnp.float32) * 0.1).astype(dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+        "norm_scale": jnp.zeros((di,), dtype),  # gated RMSNorm before out_proj
+    }
+
+
+def init_ssm_cache(batch: int, spec: SSMSpec, dtype) -> dict:
+    conv_ch = spec.d_inner + 2 * spec.n_groups * spec.state_dim
+    return {
+        "state": jnp.zeros((batch, spec.num_heads, spec.head_dim, spec.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_dim - 1, conv_ch), dtype),
+        # 'pos' kept for interface parity with KV caches (unused numerically)
+        "pos": jnp.zeros((batch, 1), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, prefix: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: [B, L, C]; w: [K, C]; prefix: [B, K-1, C]."""
+    K = w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)  # [B, L+K-1, C]
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    new_prefix = xp[:, xp.shape[1] - (K - 1) :]
+    return out, new_prefix
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: [..., L] -> [..., L, L] lower-triangular pairwise sums
+    S[i, j] = sum(a[j+1..i]) for j < i, 0 on diag, -inf above."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# SSD core: chunked (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, Bmat, Cmat, chunk: int, init_state=None):
+    """x: [B,L,H,P], dt: [B,L,H] (post-softplus), A: [H] (negative),
+    Bmat/Cmat: [B,L,G,N].  Returns (y [B,L,H,P], final_state [B,H,P,N])."""
+    Bsz, L0, H, Pdim = x.shape
+    G, N = Bmat.shape[2], Bmat.shape[3]
+    Q = min(chunk, L0)
+    # Pad L to a chunk multiple.  dt=0 on pad positions is exact: decay
+    # exp(0)=1 leaves the state untouched and x*dt=0 adds nothing.
+    pad = (-L0) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = L0 + pad
+    nc = L // Q
+    rep = H // G
+
+    def toc(t):  # [B, L, ...] -> [B, nc, Q, ...]
+        return t.reshape((Bsz, nc, Q) + t.shape[2:])
+
+    xc = toc(x * dt[..., None])  # pre-scale x by dt (standard SSD form)
+    dA = toc(dt * A[None, None, :])  # [B,nc,Q,H]
+    Bc = toc(Bmat)
+    Cc = toc(Cmat)
+    # expand groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3) if G != H else Bc  # [B,nc,Q,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3) if G != H else Cc
+
+    dA_cs = jnp.cumsum(dA, axis=2)  # [B,nc,Q,H]
+
+    # --- intra-chunk (diagonal blocks) ---
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, 3, 2)))  # [B,nc,H,Q,Q]
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)  # C_q . B_k
+    M = scores * Lmat.astype(scores.dtype)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", M, xc)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # [B,nc,Q,H]
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bh, decay_to_end, xc)  # [B,nc,H,P,N]
+
+    # --- inter-chunk recurrence over nc ---
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # [B,nc,H]
+    s0 = (
+        init_state.astype(states.dtype)
+        if init_state is not None
+        else jnp.zeros((Bsz, H, Pdim, N), states.dtype)
+    )
+
+    def step(h, inp):
+        dec, s = inp  # dec: [B,H], s: [B,H,P,N]
+        h_new = h * dec[..., None, None] + s
+        return h_new, h  # emit state *entering* the chunk
+
+    (final_state, prev_states) = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B,nc,H,P,N]
+
+    # --- inter-chunk contribution ---
+    state_decay = jnp.exp(dA_cs)  # decay from chunk start to position q
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, Pdim)
+    return y[:, :L0], final_state
+
+
+def ssd_reference(x, dt, A, Bmat, Cmat, init_state=None):
+    """Naive sequential recurrence oracle (tests)."""
+    Bsz, L, H, Pdim = x.shape
+    G, N = Bmat.shape[2], Bmat.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bmat, rep, axis=2) if G != H else Bmat
+    Ch = jnp.repeat(Cmat, rep, axis=2) if G != H else Cmat
+    h = init_state if init_state is not None else jnp.zeros((Bsz, H, Pdim, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        decay = jnp.exp(dtt * A[None, :])  # [B,H]
+        h = h * decay[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], Bt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bh, 1, 0),
+        jnp.moveaxis(Ch, 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+# ---------------------------------------------------------------------------
+# Layer apply
+# ---------------------------------------------------------------------------
+
+
+def ssm_layer(
+    cfg: ModelConfig,
+    spec: SSMSpec,
+    params: dict,
+    x: jax.Array,  # [B, S, D]
+    *,
+    cache: Optional[dict] = None,
+    mode: str = "train",
+) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    di, g, n, h, p = spec.d_inner, spec.n_groups, spec.state_dim, spec.num_heads, spec.head_dim
+
+    proj = x @ params["in_proj"]  # [B,S, 2di+2gn+h]
+    z, xin, Bm, Cm, dt = jnp.split(proj, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    prefix = cache["conv"] if (cache is not None and mode.startswith("decode")) else None
+    conv_out, new_prefix = _causal_conv(conv_in, params["conv_w"], prefix)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + g * n], axis=-1)
+
+    xh = xin.reshape(B, S, h, p)
+    Bh = Bm.reshape(B, S, g, n).astype(jnp.float32)
+    Ch = Cm.reshape(B, S, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,h]
+    A = -jnp.exp(params["A_log"])  # [h], negative
+
+    init_state = cache["state"] if (cache is not None and mode.startswith("decode")) else None
+    if mode.startswith("decode") and S == 1:
+        # single-step recurrence
+        y, state = ssd_reference(xh.astype(jnp.float32), dt, A, Bh, Ch, init_state)
+    else:
+        y, state = ssd_chunked(xh.astype(jnp.float32), dt, A, Bh, Ch, spec.chunk, init_state)
+
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+
+    # gated RMSNorm (mamba2)
+    y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + cfg.rms_eps) * (1.0 + params["norm_scale"].astype(jnp.float32))).astype(x.dtype)
+
+    out = y @ params["out_proj"]
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": state.astype(jnp.float32), "conv": new_prefix.astype(cache["conv"].dtype), "pos": cache["pos"] + S}
+    return out, new_cache

@@ -1,0 +1,209 @@
+"""Block / segment assembly.
+
+A block = pre-norm mixer (attention | SSD | RG-LRU) [+ pre-norm cross-attn]
++ pre-norm FFN (dense | MoE | none), all residual.  Segments stack identical
+patterns under ``jax.lax.scan`` with parameters (and caches) stacked on a
+leading ``repeats`` axis — HLO size stays O(unique layer kinds) regardless of
+depth, which is what makes 512-device dry-run compiles of 62-95 layer models
+tractable, and is the natural representation for PR-MoE's pyramid segments.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnSpec, FFNSpec, LayerSpec, LRUSpec, ModelConfig, Segment, SSMSpec
+from repro.core.moe import init_moe, moe_layer
+from repro.models.attention import attention, init_attention, init_kv_cache
+from repro.models.modules import init_mlp, init_rmsnorm, mlp, rmsnorm
+from repro.models.rglru import init_lru, init_lru_cache, lru_layer
+from repro.models.ssm import init_ssm, init_ssm_cache, ssm_layer
+from repro.parallel.sharding import shard_hint
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig, ls: LayerSpec, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {"norm_mixer": init_rmsnorm(cfg.d_model, dtype)}
+    m = ls.mixer
+    if isinstance(m, AttnSpec):
+        p["attn"] = init_attention(ks[0], cfg, m, dtype)
+    elif isinstance(m, SSMSpec):
+        p["ssm"] = init_ssm(ks[0], cfg, m, dtype)
+    elif isinstance(m, LRUSpec):
+        p["lru"] = init_lru(ks[0], cfg, m, dtype)
+    else:
+        raise TypeError(m)
+    if ls.cross is not None:
+        p["norm_cross"] = init_rmsnorm(cfg.d_model, dtype)
+        p["cross"] = init_attention(ks[1], cfg, ls.cross, dtype)
+    if ls.ffn.kind == "dense":
+        p["norm_ffn"] = init_rmsnorm(cfg.d_model, dtype)
+        p["ffn"] = init_mlp(ks[2], cfg.d_model, ls.ffn.d_ff, ls.ffn.act, dtype)
+    elif ls.ffn.kind == "moe":
+        p["norm_ffn"] = init_rmsnorm(cfg.d_model, dtype)
+        p["moe"] = init_moe(ks[2], cfg, ls.ffn, dtype)
+    return p
+
+
+def init_layer_cache(cfg: ModelConfig, ls: LayerSpec, batch: int, capacity: int, dtype, *, cross_len: int = 0):
+    """Cache pytree for one layer.  ``capacity`` = full-context length for
+    global attention; local layers get a ring of size window."""
+    c = {}
+    m = ls.mixer
+    if isinstance(m, AttnSpec):
+        cap = min(m.window, capacity) if (m.kind == "local" and m.window > 0) else capacity
+        c["self"] = init_kv_cache(batch, cap, cfg.num_kv_heads, cfg.head_dim, dtype)
+    elif isinstance(m, SSMSpec):
+        c["self"] = init_ssm_cache(batch, m, dtype)
+    elif isinstance(m, LRUSpec):
+        c["self"] = init_lru_cache(batch, m, dtype)
+    if ls.cross is not None:
+        c["cross"] = init_kv_cache(batch, max(cross_len, 1), cfg.num_kv_heads, cfg.head_dim, dtype)
+    return c
+
+
+def apply_layer(
+    cfg: ModelConfig,
+    ls: LayerSpec,
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: Optional[dict] = None,
+    mode: str = "train",
+    memory: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(params["norm_mixer"], x, cfg.rms_eps)
+    sc = cache.get("self") if cache is not None else None
+    m = ls.mixer
+    if isinstance(m, AttnSpec):
+        y, new_self = attention(cfg, m, params["attn"], h, positions, cache=sc, mode=mode)
+    elif isinstance(m, SSMSpec):
+        y, new_self = ssm_layer(cfg, m, params["ssm"], h, cache=sc, mode=mode)
+    elif isinstance(m, LRUSpec):
+        y, new_self = lru_layer(cfg, m, params["lru"], h, cache=sc, mode=mode)
+    else:
+        raise TypeError(m)
+    x = x + y
+    new_cache = dict(cache) if cache is not None else None
+
+    if ls.cross is not None:
+        h = rmsnorm(params["norm_cross"], x, cfg.rms_eps)
+        cc = cache.get("cross") if cache is not None else None
+        y, new_cross = attention(
+            cfg, ls.cross, params["cross"], h, positions, memory=memory, cache=cc, mode=mode
+        )
+        x = x + y
+        if new_cache is not None:
+            new_cache["cross"] = new_cross
+
+    if ls.ffn.kind == "dense":
+        h = rmsnorm(params["norm_ffn"], x, cfg.rms_eps)
+        x = x + mlp(params["ffn"], h, ls.ffn.act)
+    elif ls.ffn.kind == "moe":
+        h = rmsnorm(params["norm_ffn"], x, cfg.rms_eps)
+        y, aux = moe_layer(cfg, ls.ffn, params["moe"], h)
+        x = x + y
+
+    if new_cache is not None and "self" in new_cache:
+        new_cache["self"] = new_self
+    x = shard_hint(x, "batch", "seq", "embed")
+    if BF16_BWD[0]:
+        from repro.models.modules import grad_cast
+
+        x = grad_cast(x)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Segment (scan over repeats)
+# ---------------------------------------------------------------------------
+
+
+def init_segment(key, cfg: ModelConfig, seg: Segment, dtype) -> dict:
+    """Params: {"pos{j}": stacked-over-repeats layer params}."""
+    out = {}
+    for j, ls in enumerate(seg.pattern):
+        keys = jax.random.split(jax.random.fold_in(key, j), seg.repeats)
+        out[f"pos{j}"] = jax.vmap(lambda k: init_layer(k, cfg, ls, dtype))(keys)
+    return out
+
+
+def init_segment_cache(cfg: ModelConfig, seg: Segment, batch: int, capacity: int, dtype, *, cross_len: int = 0):
+    out = {}
+    for j, ls in enumerate(seg.pattern):
+        one = init_layer_cache(cfg, ls, batch, capacity, dtype, cross_len=cross_len)
+        out[f"pos{j}"] = jax.tree.map(lambda a: jnp.broadcast_to(a, (seg.repeats,) + a.shape), one)
+    return out
+
+
+def apply_segment(
+    cfg: ModelConfig,
+    seg: Segment,
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    caches: Optional[dict] = None,
+    mode: str = "train",
+    memory: Optional[jax.Array] = None,
+    remat: bool = False,
+):
+    """Scan the segment.  caches (if given) mirror the params structure with a
+    leading ``repeats`` axis.  Returns (x, new_caches, aux_sum)."""
+    has_cache = caches is not None
+
+    def body(carry, xs):
+        x, aux = carry
+        new_caches = {}
+        for j, ls in enumerate(seg.pattern):
+            pkey = f"pos{j}"
+            c = xs[1][pkey] if has_cache else None
+            x, c_new, a = apply_layer(
+                cfg, ls, xs[0][pkey], x, positions, cache=c, mode=mode, memory=memory
+            )
+            if has_cache:
+                new_caches[pkey] = c_new
+            aux = aux + a
+        return (x, aux), (new_caches if has_cache else 0)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    # scan requires every xs leaf to have leading dim == repeats
+    xs = (params, caches if has_cache else jnp.zeros((seg.repeats,), jnp.int8))
+    (x, aux), ys = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs, unroll=_SCAN_UNROLL[0] or 1
+    )
+    return x, (ys if has_cache else None), aux
+
+
+# Dry-run knob: setting _SCAN_UNROLL[0] = True fully unrolls segment scans so
+# XLA cost_analysis counts every layer (it otherwise counts a while-loop body
+# once).  Compile is slower; used by launch/dryrun.py only.
+_SCAN_UNROLL = [False]
+
+
+def set_scan_unroll(full: bool) -> None:
+    _SCAN_UNROLL[0] = bool(full)
+
+
+# Perf toggle (EXPERIMENTS.md §Perf): cast the residual-stream cotangent back
+# to the activation dtype at every layer boundary — halves backward-pass
+# collective and HBM traffic that JAX's f32 cotangent promotion otherwise
+# doubles.  Enabled via launch/dryrun --train-opt bf16_bwd.
+BF16_BWD = [False]
+
+
+def set_bf16_bwd(on: bool) -> None:
+    BF16_BWD[0] = bool(on)

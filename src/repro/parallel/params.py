@@ -1,0 +1,215 @@
+"""Parameter PartitionSpec assignment (rule-based, path-driven).
+
+Every model parameter gets a spec according to DESIGN.md §4.  Rules respect
+divisibility (glm4's 2 KV heads or llama4's 40 Q heads cannot shard over a
+16-wide 'model' axis); when the preferred logical axis does not divide, a
+fallback axis is tried (e.g. llama4 shards head_dim instead of heads), else
+the dim is replicated.  Leaves under ``segments/`` carry a leading stacked
+scan ('layers') dim which is never sharded.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import get_rules
+
+
+def _axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _pick(mesh, rules, options: Sequence[str], dim: int, taken: set) -> Optional[object]:
+    sizes = _axis_sizes(mesh)
+    for name in options:
+        axes = rules.get(name)
+        if axes is None:
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        picked = []
+        prod = 1
+        ok = True
+        for a in axes:
+            if a in taken or a not in sizes:
+                ok = False
+                break
+            prod *= sizes[a]
+            picked.append(a)
+        if not ok or prod == 1:
+            continue
+        if dim % prod == 0:
+            for a in picked:
+                taken.add(a)
+            return tuple(picked) if len(picked) > 1 else picked[0]
+    return None
+
+
+def _leaf_spec(mesh, rules, parent: str, name: str, shape: Tuple[int, ...], stacked: bool) -> P:
+    """dim_options: per-dim tuple of logical-axis names to try in order."""
+    core = shape[1:] if stacked else shape
+    nd = len(core)
+
+    def opts() -> list:
+        if parent in ("attn", "cross"):
+            if name == "wq":
+                return [("embed",), ("heads",), ("head_dim",)] if nd == 3 else [()] * nd
+            if name in ("wk", "wv"):
+                return [("embed",), ("kv_heads",), ("head_dim",)]
+            if name == "wo":
+                return [("heads",), ("head_dim",), ("embed",)]
+        if parent in ("ffn", "residual"):
+            if name in ("wi", "wg"):
+                return [("embed",), ("mlp",)]
+            if name == "wo":
+                return [("mlp",), ("embed",)]
+        if parent == "moe":
+            if name == "router":
+                return [("embed",), ()]
+            if name in ("wi", "wg"):
+                return [("expert",), ("embed",), ("expert_mlp", "mlp")]
+            if name == "wo":
+                return [("expert",), ("expert_mlp", "mlp"), ("embed",)]
+        if name == "embed":
+            return [("vocab",), ("embed",)]
+        if name == "unembed":
+            return [("embed",), ("vocab",)]
+        # ssm / lru mixer params, norms, scalars: replicated
+        return [()] * nd
+
+    dim_options = opts()
+    if len(dim_options) != nd:
+        dim_options = [()] * nd
+    taken: set = set()
+    core_spec = []
+    # attention fallback: if 'heads' can't shard, try 'head_dim' on that dim
+    fallback = {"heads": ("head_dim",), "kv_heads": ("head_dim",)}
+    for d, options in zip(core, dim_options):
+        names = list(options)
+        for o in options:
+            names.extend(fallback.get(o, ()))
+        # 'embed' is replicated by default rules; including it is harmless
+        core_spec.append(_pick(mesh, rules, names, d, taken))
+    if stacked:
+        return P(None, *core_spec)
+    return P(*core_spec)
+
+
+def _extend_for_train(spec: P, shape: Tuple[int, ...], mesh, stacked: bool = False) -> P:
+    """ZeRO-3/FSDP extension: additionally shard parameters (and optimizer
+    moments) over the 'data' (and 'pod') axes on the first divisible free
+    dim.  The paper trains with ZeRO [23]; under GSPMD + scan-over-layers the
+    per-layer all-gather this induces is naturally scheduled layer-by-layer.
+    Serving keeps params replicated over 'data' instead — that is the paper's
+    aggregate-memory-bandwidth inference layout."""
+    sizes = _axis_sizes(mesh)
+    used = set()
+    for s in spec:
+        if s is None:
+            continue
+        for a in s if isinstance(s, tuple) else (s,):
+            used.add(a)
+    out = list(spec)
+    for extra in ("data", "pod"):
+        if extra in used or extra not in sizes or sizes[extra] == 1:
+            continue
+        for i, (s, d) in enumerate(zip(out, shape)):
+            if stacked and i == 0:
+                continue  # never shard the scan (layers) dim
+            cur = 1
+            if s is not None:
+                for a in s if isinstance(s, tuple) else (s,):
+                    cur *= sizes[a]
+            if d % (cur * sizes[extra]) == 0 and d // cur >= sizes[extra]:
+                if s is None:
+                    out[i] = extra
+                else:
+                    out[i] = tuple(s if isinstance(s, tuple) else (s,)) + (extra,)
+                used.add(extra)
+                break
+    return P(*out)
+
+
+def param_pspecs(mesh, tree, *, mode: str = "serve") -> object:
+    """Build a pytree of PartitionSpec matching ``tree`` (params or shapes).
+
+    mode='serve': DESIGN.md §4 layout (TP over 'model', EP+slicing for
+    experts, non-expert params replicated over 'data' for aggregate
+    bandwidth).  mode='train': same + ZeRO-3-style extension over
+    'data'/'pod' so model+optimizer state scales with the full chip count."""
+    rules = get_rules()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        parents = set(keys[:-1])
+        if "attn" in parents:
+            parent = "attn"
+        elif "cross" in parents:
+            parent = "cross"
+        elif "moe" in parents and "residual" not in parents:
+            parent = "moe"
+        elif "residual" in parents:
+            parent = "residual"
+        elif "ffn" in parents:
+            parent = "ffn"
+        elif "ssm" in parents or "lru" in parents:
+            parent = "mixer"
+        else:
+            parent = ""
+        stacked = "segments" in parents
+        shape = tuple(leaf.shape)
+        spec = _leaf_spec(mesh, rules, parent, name, shape, stacked)
+        if mode == "train" and len(shape) >= 2:
+            spec = _extend_for_train(spec, shape, mesh, stacked)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspec(mesh, ndim: int, *, batch_divisible: bool = True) -> P:
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    lead = tuple(axes) if (axes and batch_divisible) else None
+    if isinstance(lead, tuple) and len(lead) == 1:
+        lead = lead[0]
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def cache_pspecs(mesh, tree, batch: int) -> object:
+    """KV/state caches: batch over (pod,data) when divisible; kv heads over
+    'model' when divisible (dim 2 of k/v); everything else replicated."""
+    rules = get_rules()
+    sizes = _axis_sizes(mesh)
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= sizes.get(a, 1)
+    batch_ok = batch % dp == 0
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        shape = tuple(leaf.shape)
+        stacked = "seg0" in "".join(keys) or any(k.startswith("seg") for k in keys)
+        # layout: [layers?, B, ...]
+        off = 1 if any(k.startswith("pos") and k[3:].isdigit() for k in keys) else 0
+        spec = [None] * len(shape)
+        bdim = 1 if off else 0
+        if batch_ok and len(shape) > bdim and shape[bdim] == batch:
+            axes = tuple(a for a in ("pod", "data") if a in sizes)
+            spec[bdim] = axes if len(axes) > 1 else axes[0]
+        if name in ("k", "v") and len(shape) >= bdim + 4:
+            kvh = shape[bdim + 2]
+            seq = shape[bdim + 1]
+            if "model" in sizes and sizes["model"] > 1 and kvh % sizes["model"] == 0:
+                spec[bdim + 2] = "model"
+            elif "model" in sizes and sizes["model"] > 1 and seq % sizes["model"] == 0:
+                # GQA archs with few KV heads (llama4 kv=8 < model=16): shard
+                # the cache *sequence* dim instead — GSPMD partitions the
+                # attention softmax reduction (flash-decode-style).
+                spec[bdim + 1] = "model"
+        specs.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,98 @@
+"""Mixture-of-Students: MoE-to-MoE knowledge distillation with *staged* KD
+(DeepSpeed-MoE §4.2).
+
+Loss (Eq. 1):  L = CE(x; θ) + α · KL(teacher ∥ student)
+
+The paper's key finding: running KD for the whole of training *hurts* a
+capacity-reduced student (underfitting regime); stopping KD partway (staged
+KD, e.g. at 400K/600K steps) recovers the benefit.  ``kd_alpha`` therefore
+multiplies α by (step < kd_stop_step), implemented branch-free for jit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward
+from repro.training.optimizer import AdamWConfig, adamw_update
+from repro.training.schedule import warmup_cosine
+from repro.training.trainer import TrainConfig, cross_entropy, moe_aux_coef
+
+
+@dataclass
+class KDConfig:
+    alpha: float = 1.0  # KD loss weight
+    temperature: float = 1.0
+    kd_stop_step: int = -1  # -1 = never stop ("full KD" baseline in Table 5)
+
+
+def kd_alpha(kdc: KDConfig, step: jax.Array) -> jax.Array:
+    a = jnp.asarray(kdc.alpha, jnp.float32)
+    if kdc.kd_stop_step >= 0:
+        a = a * (step < kdc.kd_stop_step).astype(jnp.float32)
+    return a
+
+
+def kd_kl(student_logits: jax.Array, teacher_logits: jax.Array, tau: float) -> jax.Array:
+    """KL(teacher ∥ student) with temperature, mean over tokens."""
+    t = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / tau, axis=-1)
+    s = jax.nn.log_softmax(student_logits.astype(jnp.float32) / tau, axis=-1)
+    kl = jnp.sum(jnp.exp(t) * (t - s), axis=-1)
+    return jnp.mean(kl) * tau**2
+
+
+def make_distill_step(
+    student_cfg: ModelConfig,
+    teacher_cfg: ModelConfig,
+    tc: TrainConfig,
+    kdc: KDConfig,
+) -> Callable:
+    """Returns step(params, opt_state, teacher_params, tokens, labels)."""
+    opt = AdamWConfig(lr=tc.lr, weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
+
+    def step_fn(params, opt_state, teacher_params, tokens, labels):
+        t_logits, _ = forward(teacher_cfg, teacher_params, tokens)
+        t_logits = jax.lax.stop_gradient(t_logits)
+        a = kd_alpha(kdc, opt_state.step)
+
+        def total_loss(p):
+            s_logits, aux = forward(student_cfg, p, tokens)
+            ce = cross_entropy(s_logits, labels)
+            kl = kd_kl(s_logits, t_logits, kdc.temperature)
+            loss = ce + a * kl + moe_aux_coef(student_cfg) * aux
+            return loss, {"ce": ce, "kl": kl, "aux": aux}
+
+        (loss, metrics), grads = jax.value_and_grad(total_loss, has_aux=True)(params)
+        lr_scale = warmup_cosine(
+            opt_state.step, warmup_steps=tc.warmup_steps, decay_steps=tc.decay_steps, min_ratio=tc.min_lr_ratio
+        )
+        params, opt_state, stats = adamw_update(opt, grads, opt_state, params, lr_scale)
+        return params, opt_state, dict(metrics, loss=loss, kd_alpha=a, **stats)
+
+    return step_fn
+
+
+def make_student_config(teacher: ModelConfig, depth_ratio: float = 0.875) -> ModelConfig:
+    """Depth-reduce a teacher (paper: 24 -> 21 layers, 12.5% off) by trimming
+    segment repeats from the top, preserving the MoE/dense interleave."""
+    target = max(1, round(teacher.num_layers * depth_ratio))
+    drop = teacher.num_layers - target
+    segs = list(teacher.segments)
+    out = []
+    for seg in reversed(segs):
+        if drop <= 0:
+            out.append(seg)
+            continue
+        take_layers = max(seg.num_layers - drop, 0)
+        drop -= seg.num_layers - take_layers
+        reps = take_layers // len(seg.pattern)
+        rem = take_layers % len(seg.pattern)
+        if reps:
+            out.append(type(seg)(seg.pattern, reps))
+        if rem:
+            out.append(type(seg)(seg.pattern[:rem], 1))
+    return teacher.replace(segments=tuple(reversed(out)), name=teacher.name + "-mos")

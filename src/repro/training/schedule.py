@@ -1,0 +1,27 @@
+"""LR schedules matching the paper's Table 1 recipe: linear warmup over a
+token budget, cosine decay to a floor, measured in *tokens* (we convert to
+steps at call-sites via tokens_per_step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup_steps: int, decay_steps: int, min_ratio: float = 0.1):
+    """Returns multiplier in [min_ratio, 1]."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - warmup_steps) / jnp.maximum(decay_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = min_ratio + (1.0 - min_ratio) * cos
+    return warm * decay
+
+
+def batch_rampup(step, *, rampup_steps: int, start_frac: float = 0.25):
+    """Paper Table 1 'batch size rampup tokens' — returns the fraction of the
+    global batch to use (we implement it as a loss mask, keeping shapes
+    static for jit)."""
+    if rampup_steps <= 0:
+        return jnp.asarray(1.0, jnp.float32)
+    step = jnp.asarray(step, jnp.float32)
+    f = start_frac + (1.0 - start_frac) * jnp.minimum(step / rampup_steps, 1.0)
+    return jnp.minimum(f, 1.0)

@@ -1,0 +1,99 @@
+"""Training loop: loss, train_step factory (jit/pjit-ready), and a small
+driver used by examples and launch/train.py."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward, init_params
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
+from repro.training.schedule import warmup_cosine
+
+
+def moe_aux_coef(cfg: ModelConfig) -> float:
+    for ls in cfg.layer_specs():
+        if ls.ffn.kind == "moe":
+            return ls.ffn.aux_loss_coef
+    return 0.0
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token CE in f32. logits [B,S,V], labels [B,S] int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, labels, *, remat: bool = False, memory=None, prefix_embeds=None):
+    logits, aux = forward(cfg, params, tokens, remat=remat, memory=memory, prefix_embeds=prefix_embeds)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1] :]
+    ce = cross_entropy(logits, labels)
+    loss = ce + moe_aux_coef(cfg) * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+@dataclass
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 50
+    decay_steps: int = 1000
+    min_lr_ratio: float = 0.1
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    remat: bool = False
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig) -> Callable:
+    opt = AdamWConfig(lr=tc.lr, weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
+
+    def train_step(params, opt_state: AdamWState, tokens, labels):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, labels, remat=tc.remat), has_aux=True
+        )(params)
+        lr_scale = warmup_cosine(
+            opt_state.step, warmup_steps=tc.warmup_steps, decay_steps=tc.decay_steps, min_ratio=tc.min_lr_ratio
+        )
+        params, opt_state, stats = adamw_update(opt, grads, opt_state, params, lr_scale)
+        metrics = dict(metrics, loss=loss, lr_scale=lr_scale, **stats)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_loop(
+    cfg: ModelConfig,
+    tc: TrainConfig,
+    data_iter,
+    num_steps: int,
+    *,
+    seed: int = 0,
+    params=None,
+    log_every: int = 10,
+    log_fn=print,
+):
+    """Returns (params, opt_state, history)."""
+    if params is None:
+        params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = init_adamw(params)
+    step_fn = jax.jit(make_train_step(cfg, tc))
+    history = []
+    t0 = time.time()
+    for step in range(num_steps):
+        tokens, labels = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, tokens, labels)
+        if step % log_every == 0 or step == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, **m})
+            log_fn(
+                f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                f"aux {m['aux']:.4f} gnorm {m['grad_norm']:.3f} ({time.time()-t0:.1f}s)"
+            )
+    return params, opt_state, history

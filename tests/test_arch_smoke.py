@@ -1,0 +1,85 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each of the 10 assigned architectures runs one forward pass and one train
+step on CPU; output shapes asserted, no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import count_params
+from repro.configs.registry import ASSIGNED, all_configs, make_reduced
+from repro.data.pipeline import data_stream
+from repro.models.model import encode, forward, init_params
+from repro.training.optimizer import init_adamw
+from repro.training.trainer import TrainConfig, make_train_step
+
+
+def _inputs(cfg, B=2, S=16, seed=0):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "encdec":
+        src = jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (B, cfg.frontend.n_tokens, cfg.frontend.embed_dim)
+        )
+        kw["memory"] = encode(cfg, init_params(cfg, jax.random.PRNGKey(0)), src)
+    if cfg.family == "vlm":
+        kw["prefix_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 2), (B, cfg.frontend.n_tokens, cfg.frontend.embed_dim)
+        )
+    return toks, kw
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+class TestArchSmoke:
+    def test_forward_shapes_no_nan(self, arch):
+        cfg = make_reduced(all_configs()[arch])
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        B, S = 2, 16
+        toks, kw = _inputs(cfg, B, S)
+        if cfg.family == "encdec":
+            kw["memory"] = encode(cfg, params, jax.random.normal(
+                jax.random.PRNGKey(3), (B, cfg.frontend.n_tokens, cfg.frontend.embed_dim)))
+        logits, aux = forward(cfg, params, toks, **kw)
+        extra = cfg.frontend.n_tokens if cfg.family == "vlm" else 0
+        assert logits.shape == (B, S + extra, cfg.vocab_size)
+        assert not bool(jnp.any(jnp.isnan(logits))), f"NaN logits in {arch}"
+        assert not bool(jnp.isnan(aux))
+
+    def test_one_train_step(self, arch):
+        cfg = make_reduced(all_configs()[arch])
+        if cfg.family in ("encdec", "vlm"):
+            pytest.skip("text-only train-step path; frontends covered in forward test")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt_state = init_adamw(params)
+        step = jax.jit(make_train_step(cfg, TrainConfig(lr=1e-3, warmup_steps=1, decay_steps=10)))
+        it = data_stream(cfg.vocab_size, 4, 16, seed=0)
+        tokens, labels = next(it)
+        params2, opt_state2, metrics = step(params, opt_state, tokens, labels)
+        assert np.isfinite(float(metrics["loss"]))
+        assert int(opt_state2.step) == 1
+        # lr warms up from 0, so take a second step before asserting movement
+        params3, opt_state3, metrics = step(params2, opt_state2, tokens, labels)
+        assert np.isfinite(float(metrics["loss"]))
+        diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), params, params3)
+        assert jax.tree.reduce(max, diffs) > 0.0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_full_config_param_count(arch):
+    """Full (non-reduced) configs match their assigned scale."""
+    targets = {
+        "gemma3-27b": (27e9, 0.1),
+        "glm4-9b": (9.4e9, 0.1),
+        "llama4-maverick-400b-a17b": (400e9, 0.05),
+        "kimi-k2-1t-a32b": (1.0e12, 0.1),
+        "deepseek-67b": (67e9, 0.05),
+        "mamba2-370m": (370e6, 0.1),
+        "llama3-8b": (8e9, 0.05),
+        "recurrentgemma-2b": (2.7e9, 0.15),
+        "seamless-m4t-medium": (0.9e9, 0.3),
+        "internvl2-1b": (0.5e9, 0.3),
+    }
+    cfg = all_configs()[arch]
+    n = count_params(cfg)
+    target, tol = targets[arch]
+    assert abs(n - target) / target < tol, f"{arch}: {n/1e9:.2f}B vs target {target/1e9:.2f}B"

@@ -1,0 +1,134 @@
+"""Attention unit tests: GQA == expanded MHA, RoPE properties, sliding
+window masks, chunked == full attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import AttnSpec, ModelConfig
+from repro.models.attention import (
+    _sdpa,
+    _window_causal_mask,
+    attend_chunked,
+    attend_full,
+    attention,
+    init_attention,
+)
+from repro.models.modules import apply_rope
+
+
+def _cfg(H=4, Hkv=2, dh=16, d=64):
+    return ModelConfig(
+        name="t", family="dense", source="x", d_model=d, num_heads=H, num_kv_heads=Hkv,
+        head_dim=dh, vocab_size=64, segments=(), param_dtype="float32", compute_dtype="float32",
+    )
+
+
+def _qkv(B=2, S=16, H=4, Hkv=2, dh=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, Hkv, dh))
+    v = jax.random.normal(ks[2], (B, S, Hkv, dh))
+    return q, k, v
+
+
+class TestSDPA:
+    def test_gqa_equals_expanded_mha(self):
+        q, k, v = _qkv()
+        B, S = q.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        mask = _window_causal_mask(pos, pos, 0, True)
+        out_gqa = _sdpa(q, k, v, mask, 0.25, 0.0)
+        # expand kv to full heads and compute with Hkv == H
+        k2 = jnp.repeat(k, 2, axis=2)
+        v2 = jnp.repeat(v, 2, axis=2)
+        out_mha = _sdpa(q, k2, v2, mask, 0.25, 0.0)
+        np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha), atol=1e-5)
+
+    def test_causality(self):
+        """Changing future K/V must not change current output."""
+        q, k, v = _qkv(S=8)
+        pos = jnp.arange(8)[None]
+        spec = AttnSpec(kind="global")
+        y1 = attend_full(q, k, v, pos, pos, spec, 0.25)
+        k2 = k.at[:, 5:].set(99.0)
+        v2 = v.at[:, 5:].set(-99.0)
+        y2 = attend_full(q, k2, v2, pos, pos, spec, 0.25)
+        np.testing.assert_allclose(np.asarray(y1[:, :5]), np.asarray(y2[:, :5]), atol=1e-6)
+
+    def test_window_mask(self):
+        q_pos = jnp.arange(8)[None]
+        m = _window_causal_mask(q_pos, q_pos, 3, True)[0, 0, 0]
+        m = np.asarray(m)
+        for i in range(8):
+            for j in range(8):
+                expect = (j <= i) and (i - j < 3)
+                assert m[i, j] == expect, (i, j)
+
+    def test_softcap_bounds_logits(self):
+        q, k, v = _qkv(S=4)
+        pos = jnp.arange(4)[None]
+        spec = AttnSpec(kind="global", logit_softcap=5.0)
+        y = attend_full(q * 100, k * 100, v, pos, pos, spec, 0.25)
+        assert np.isfinite(np.asarray(y)).all()
+
+
+class TestChunked:
+    @pytest.mark.parametrize("kind,window", [("global", 0), ("local", 512), ("local", 100)])
+    def test_chunked_equals_full(self, kind, window):
+        B, S, H, Hkv, dh = 1, 2048, 2, 1, 8
+        q, k, v = _qkv(B, S, H, Hkv, dh, seed=3)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        spec = AttnSpec(kind=kind, window=window)
+        y_full = attend_full(q, k, v, pos, pos, spec, 0.3)
+        y_chunk = attend_chunked(q, k, v, pos, pos, spec, 0.3, q_chunk=512)
+        np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_full), atol=1e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(window=st.sampled_from([64, 200, 513]), seed=st.integers(0, 20))
+    def test_property_local_window_chunks(self, window, seed):
+        B, S = 1, 1024
+        q, k, v = _qkv(B, S, 2, 1, 8, seed=seed)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        spec = AttnSpec(kind="local", window=window)
+        y_full = attend_full(q, k, v, pos, pos, spec, 0.3)
+        y_chunk = attend_chunked(q, k, v, pos, pos, spec, 0.3, q_chunk=256)
+        np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_full), atol=1e-4)
+
+
+class TestRoPE:
+    def test_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n."""
+        dh = 32
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, dh))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, dh))
+        def score(m, n):
+            qm = apply_rope(q, jnp.asarray([[m]]), 10000.0)
+            kn = apply_rope(k, jnp.asarray([[n]]), 10000.0)
+            return float(jnp.sum(qm * kn))
+        assert abs(score(3, 1) - score(10, 8)) < 1e-4
+        assert abs(score(0, 0) - score(7, 7)) < 1e-4
+
+    def test_norm_preserved(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 2, 16))
+        y = apply_rope(x, jnp.arange(4)[None], 10000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1), np.linalg.norm(np.asarray(y), axis=-1),
+            atol=1e-5,
+        )
+
+
+class TestAttentionLayer:
+    def test_cross_attention_ignores_causal(self):
+        cfg = _cfg()
+        spec = AttnSpec(kind="cross", causal=False, use_rope=False)
+        params = init_attention(jax.random.PRNGKey(0), cfg, spec, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 64))
+        mem = jax.random.normal(jax.random.PRNGKey(2), (2, 10, 64))
+        y, _ = attention(cfg, spec, params, x, jnp.arange(4)[None], memory=mem, mode="train")
+        assert y.shape == (2, 4, 64)
+        # without positional encoding, cross attention is permutation-
+        # invariant over the memory sequence
+        y2, _ = attention(cfg, spec, params, x, jnp.arange(4)[None], memory=mem[:, ::-1], mode="train")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-5)

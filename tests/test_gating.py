@@ -1,0 +1,127 @@
+"""Gating unit + property tests (core/gating.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gating import (
+    expert_capacity,
+    load_balance_loss,
+    router_z_loss,
+    top_k_gating,
+)
+
+
+def _logits(T, E, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (T, E))
+
+
+class TestTopKGating:
+    def test_shapes(self):
+        g = top_k_gating(_logits(32, 8), 2, 16)
+        assert g.expert_idx.shape == (32, 2)
+        assert g.combine_w.shape == (32, 2)
+        assert g.position.shape == (32, 2)
+        assert g.keep.shape == (32, 2)
+        assert g.probs.shape == (32, 8)
+
+    def test_probs_sum_to_one(self):
+        g = top_k_gating(_logits(64, 16), 1, 64)
+        np.testing.assert_allclose(np.asarray(jnp.sum(g.probs, -1)), 1.0, atol=1e-5)
+
+    def test_topk_normalized(self):
+        g = top_k_gating(_logits(64, 16), 4, 64, normalize=True)
+        np.testing.assert_allclose(np.asarray(jnp.sum(g.combine_w, -1)), 1.0, atol=1e-5)
+
+    def test_top1_weight_is_max_prob(self):
+        g = top_k_gating(_logits(64, 16), 1, 64)
+        np.testing.assert_allclose(
+            np.asarray(g.combine_w[:, 0]), np.asarray(jnp.max(g.probs, -1)), atol=1e-6
+        )
+
+    def test_positions_unique_within_expert(self):
+        g = top_k_gating(_logits(128, 4), 2, 1024)
+        eidx = np.asarray(g.expert_idx).reshape(-1)
+        pos = np.asarray(g.position).reshape(-1)
+        for e in range(4):
+            p = pos[eidx == e]
+            assert len(np.unique(p)) == len(p), f"duplicate slots in expert {e}"
+
+    def test_capacity_drops(self):
+        # force all tokens to expert 0 with capacity 8 -> only 8 kept
+        logits = jnp.zeros((32, 4)).at[:, 0].set(10.0)
+        g = top_k_gating(logits, 1, 8)
+        assert int(jnp.sum(g.keep)) == 8
+        assert np.all(np.asarray(g.combine_w)[~np.asarray(g.keep)] == 0.0)
+
+    def test_earlier_tokens_win_capacity(self):
+        logits = jnp.zeros((32, 4)).at[:, 0].set(10.0)
+        g = top_k_gating(logits, 1, 8)
+        kept = np.asarray(g.keep[:, 0])
+        assert kept[:8].all() and not kept[8:].any()
+
+    def test_sort_equals_cumsum(self):
+        for T, E, K in [(64, 8, 1), (128, 16, 2), (96, 32, 4)]:
+            logits = _logits(T, E, seed=T)
+            g1 = top_k_gating(logits, K, 16, method="cumsum")
+            g2 = top_k_gating(logits, K, 16, method="sort")
+            np.testing.assert_array_equal(np.asarray(g1.expert_idx), np.asarray(g2.expert_idx))
+            np.testing.assert_array_equal(np.asarray(g1.position), np.asarray(g2.position))
+            np.testing.assert_array_equal(np.asarray(g1.keep), np.asarray(g2.keep))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        T=st.integers(4, 96),
+        E=st.sampled_from([2, 4, 8, 16]),
+        K=st.integers(1, 3),
+        seed=st.integers(0, 1000),
+    )
+    def test_property_positions_bounded(self, T, E, K, seed):
+        K = min(K, E)
+        cap = expert_capacity(T, E, K, 1.25)
+        g = top_k_gating(_logits(T, E, seed), K, cap)
+        pos = np.asarray(g.position)
+        assert (pos >= 0).all() and (pos < cap).all()
+        # kept fraction per expert never exceeds capacity
+        eidx = np.asarray(g.expert_idx)
+        keep = np.asarray(g.keep)
+        for e in range(E):
+            assert keep[eidx == e].sum() <= cap
+
+    @settings(max_examples=20, deadline=None)
+    @given(E=st.sampled_from([4, 8, 16]), seed=st.integers(0, 100))
+    def test_property_sort_cumsum_agree(self, E, seed):
+        logits = _logits(64, E, seed)
+        g1 = top_k_gating(logits, 2, 8, method="cumsum")
+        g2 = top_k_gating(logits, 2, 8, method="sort")
+        np.testing.assert_array_equal(np.asarray(g1.position), np.asarray(g2.position))
+
+
+class TestAuxLosses:
+    def test_load_balance_minimized_uniform(self):
+        # perfectly uniform routing -> loss == 1.0 (its minimum)
+        T, E = 64, 8
+        logits = jnp.zeros((T, E))
+        eidx = jnp.tile(jnp.arange(E, dtype=jnp.int32), T // E)[:, None]
+        probs = jnp.full((T, E), 1.0 / E)
+        lb = load_balance_loss(probs, eidx, E)
+        assert abs(float(lb) - 1.0) < 1e-5
+
+    def test_load_balance_penalizes_collapse(self):
+        T, E = 64, 8
+        probs = jnp.zeros((T, E)).at[:, 0].set(1.0)
+        eidx = jnp.zeros((T, 1), jnp.int32)
+        lb = load_balance_loss(probs, eidx, E)
+        assert float(lb) > 7.0  # E * 1 * 1 = 8
+
+    def test_z_loss_nonneg(self):
+        assert float(router_z_loss(_logits(32, 8))) >= 0.0
+
+
+class TestCapacity:
+    def test_capacity_formula(self):
+        assert expert_capacity(1024, 8, 1, 1.0) == 128
+        assert expert_capacity(1024, 8, 2, 1.0) == 256
+        # padded to multiple of 8, floor 8
+        assert expert_capacity(4, 64, 1, 1.0) == 8

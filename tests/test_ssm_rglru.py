@@ -1,0 +1,128 @@
+"""Mixer-level tests: Mamba2 SSD chunked vs sequential oracle; RG-LRU
+associative scan vs step recurrence; decode-state handoff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import LRUSpec, ModelConfig, SSMSpec
+from repro.models.rglru import init_lru, init_lru_cache, lru_layer, lru_scan
+from repro.models.ssm import (
+    init_ssm,
+    init_ssm_cache,
+    ssd_chunked,
+    ssd_reference,
+    ssm_layer,
+)
+
+
+def _cfg(d=64):
+    return ModelConfig(
+        name="t", family="ssm", source="x", d_model=d, num_heads=4, num_kv_heads=4,
+        head_dim=16, vocab_size=64, segments=(), param_dtype="float32", compute_dtype="float32",
+    )
+
+
+def _ssd_inputs(B=2, L=64, H=4, P=8, G=1, N=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, G, N)) * 0.5
+    Cm = jax.random.normal(jax.random.fold_in(ks[3], 1), (B, L, G, N)) * 0.5
+    return x, dt, A, Bm, Cm
+
+
+class TestSSD:
+    @pytest.mark.parametrize("chunk", [8, 16, 64])
+    def test_chunked_matches_sequential(self, chunk):
+        x, dt, A, Bm, Cm = _ssd_inputs()
+        y1, s1 = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+        y2, s2 = ssd_reference(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4, rtol=1e-4)
+
+    def test_nondivisible_length_pads(self):
+        x, dt, A, Bm, Cm = _ssd_inputs(L=50)
+        y1, s1 = ssd_chunked(x, dt, A, Bm, Cm, 16)
+        y2, s2 = ssd_reference(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4, rtol=1e-4)
+
+    def test_initial_state_carried(self):
+        x, dt, A, Bm, Cm = _ssd_inputs(L=32)
+        # run first half, then second half with carried state
+        y_full, s_full = ssd_reference(x, dt, A, Bm, Cm)
+        y1, s1 = ssd_chunked(x[:, :16], dt[:, :16], A, Bm[:, :16], Cm[:, :16], 8)
+        y2, s2 = ssd_chunked(x[:, 16:], dt[:, 16:], A, Bm[:, 16:], Cm[:, 16:], 8, init_state=s1)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full), atol=1e-4, rtol=1e-4
+        )
+        np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4, rtol=1e-4)
+
+    def test_grouped_heads(self):
+        x, dt, A, Bm, Cm = _ssd_inputs(H=8, G=2)
+        y1, s1 = ssd_chunked(x, dt, A, Bm, Cm, 16)
+        y2, s2 = ssd_reference(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(L=st.integers(4, 48), chunk=st.sampled_from([4, 8, 16]), seed=st.integers(0, 50))
+    def test_property_chunk_invariance(self, L, chunk, seed):
+        x, dt, A, Bm, Cm = _ssd_inputs(L=L, seed=seed)
+        y1, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+        y2, _ = ssd_reference(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4, rtol=2e-3)
+
+
+class TestSSMLayer:
+    def test_prefill_then_decode_equals_full(self):
+        cfg = _cfg()
+        spec = SSMSpec(d_inner=128, head_dim=16, state_dim=16, conv_dim=4, chunk=8)
+        params = init_ssm(jax.random.PRNGKey(0), cfg, spec, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 20, 64)) * 0.5
+        y_full, _ = ssm_layer(cfg, spec, params, x, mode="train")
+        cache = init_ssm_cache(2, spec, jnp.float32)
+        y1, cache = ssm_layer(cfg, spec, params, x[:, :16], cache=cache, mode="prefill")
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y_full[:, :16]), atol=1e-3)
+        for t in range(16, 20):
+            yt, cache = ssm_layer(cfg, spec, params, x[:, t : t + 1], cache=cache, mode="decode")
+            np.testing.assert_allclose(
+                np.asarray(yt[:, 0]), np.asarray(y_full[:, t]), atol=1e-3, err_msg=f"t={t}"
+            )
+
+
+class TestLRU:
+    def test_scan_matches_loop(self):
+        B, L, W = 2, 32, 16
+        a = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(0), (B, L, W)))
+        b = jax.random.normal(jax.random.PRNGKey(1), (B, L, W))
+        hs = lru_scan(a, b)
+        h = jnp.zeros((B, W))
+        for t in range(L):
+            h = a[:, t] * h + b[:, t]
+            np.testing.assert_allclose(np.asarray(hs[:, t]), np.asarray(h), atol=1e-5)
+
+    def test_prefill_then_decode_equals_full(self):
+        cfg = _cfg(d=32)
+        spec = LRUSpec(lru_width=32, conv_dim=4, num_heads=2)
+        params = init_lru(jax.random.PRNGKey(0), cfg, spec, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 20, 32)) * 0.5
+        y_full, _ = lru_layer(cfg, spec, params, x, mode="train")
+        cache = init_lru_cache(2, spec, jnp.float32)
+        y1, cache = lru_layer(cfg, spec, params, x[:, :16], cache=cache, mode="prefill")
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y_full[:, :16]), atol=1e-4)
+        for t in range(16, 20):
+            yt, cache = lru_layer(cfg, spec, params, x[:, t : t + 1], cache=cache, mode="decode")
+            np.testing.assert_allclose(
+                np.asarray(yt[:, 0]), np.asarray(y_full[:, t]), atol=1e-4, err_msg=f"t={t}"
+            )
+
+    def test_forget_gate_bounds(self):
+        """a_t in (0,1): state remains bounded for bounded input."""
+        B, L, W = 1, 256, 8
+        a = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(0), (B, L, W)) + 2.0)
+        b = jnp.ones((B, L, W))
+        hs = lru_scan(a, b)
+        assert np.isfinite(np.asarray(hs)).all()
