@@ -1,0 +1,10 @@
+.PHONY: test test-quant bench-quant
+
+test:
+	sh scripts/ci.sh
+
+test-quant:
+	PYTHONPATH=src python -m pytest -q tests/test_quant.py
+
+bench-quant:
+	PYTHONPATH=src python -m benchmarks.run quant

@@ -63,6 +63,7 @@ def decode_latency_model(
     optimized: bool,
     tokens_per_gpu: int = 16,
     bytes_per_param: int = 2,
+    expert_bytes_per_param: float | None = None,  # weight-only expert PTQ
 ) -> float:
     """Seconds per decode step, weak-scaling serving load (B = 16·g tokens —
     with a production batch every expert is touched, so each GPU reads its
@@ -84,7 +85,8 @@ def decode_latency_model(
     hop_lat = 5e-6
     tok_bytes = cfg.d_model * bytes_per_param * tokens_per_gpu
 
-    t_expert = (expert_params * bytes_per_param / g) / HBM_BW
+    ebp = bytes_per_param if expert_bytes_per_param is None else expert_bytes_per_param
+    t_expert = (expert_params * ebp / g) / HBM_BW
     t_nonexpert = (nonexpert * bytes_per_param / tp) / HBM_BW
     # tensor-slicing all-reduces: 2 per layer; baseline NCCL small-message
     # overhead ~50us vs optimized (SCCL + fused) ~5us (§5.3)

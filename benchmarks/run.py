@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig14_15 — MoE vs quality-equivalent dense serving latency/cost
   kernel6x — sparse-einsum vs fused dense-mapping MoE kernels (>6x, §5.4)
   moe_impl — full MoE layer wall-clock, einsum vs dense dispatch (CPU)
+  quant    — MoQ expert PTQ: bytes int8/int4 vs fp32, CPU overhead, and the
+             projected decode-latency win at 1 byte/param (§4)
 
 Run: PYTHONPATH=src python -m benchmarks.run [section ...]
 """
@@ -178,6 +180,53 @@ def moe_impl() -> None:
     emit("moe_layer_full_speedup", 0.0, f"{us['einsum']/us['dense']:.2f}x")
 
 
+def quant() -> None:
+    """MoQ (§4, "up to 3.7x" smaller): expert-weight PTQ.  Reports (a) expert
+    parameter bytes fp32 vs int8/int4 (+scales), (b) expert-MLP wall-clock on
+    the CPU dequant-einsum path, (c) projected decode latency with 1-byte
+    weights through the paper's analytic memory-bound latency model."""
+    from repro.configs.base import FFNSpec, ModelConfig, QuantConfig
+    from repro.core.moe import experts_ffn, init_moe
+    from repro.quant import quantize_params, tree_bytes
+
+    cfg = ModelConfig(name="q", family="moe", source="x", d_model=256, num_heads=4,
+                      num_kv_heads=4, head_dim=64, vocab_size=1024, segments=(),
+                      param_dtype="float32", compute_dtype="float32")
+    spec = FFNSpec(kind="moe", d_ff=1024, num_experts=16, top_k=1, act="swiglu")
+    params = init_moe(jax.random.PRNGKey(0), cfg, spec, jnp.float32)
+    expert = {k: params[k] for k in ("wi", "wg", "wo")}
+    fp_bytes = tree_bytes(expert)
+
+    quantized = {}
+    for bits, gs in ((8, 0), (4, 64)):
+        qp = quantize_params({"moe": expert}, QuantConfig(bits=bits, group_size=gs))["moe"]
+        quantized[bits] = qp
+        qb = tree_bytes(qp)
+        emit(f"quant_expert_bytes_int{bits}", 0.0,
+             f"fp32={fp_bytes},int{bits}+scales={qb},reduction={fp_bytes/qb:.2f}x(paper:3.7x_model)")
+
+    E, C, D = spec.num_experts, 128, cfg.d_model
+    xe = jax.random.normal(jax.random.PRNGKey(1), (E, C, D), jnp.float32)
+    f_fp = jax.jit(lambda p, xe: experts_ffn(p, xe, "swiglu"))
+    us_fp = time_fn(f_fp, params, xe, iters=10)
+    emit("quant_expert_mlp_fp32", us_fp, f"E={E},C={C},D={D},F={spec.d_ff}")
+    for bits in (8, 4):
+        us_q = time_fn(f_fp, quantized[bits], xe, iters=10)
+        emit(f"quant_expert_mlp_int{bits}_dequant_einsum", us_q,
+             f"overhead_vs_fp={us_q/us_fp:.2f}x(CPU_ref_path;TPU_uses_dequant-in-kernel)")
+
+    # Projected decode latency: experts-only int8 halves ONLY the expert
+    # bytes streamed from HBM (dense weights and activation/a2a traffic stay
+    # bf16) — the term that dominates the paper's fig. 10/11 at low GPU
+    # counts, where experts are the bulk of per-GPU bytes.
+    cfg52 = all_configs()["nlg-1.3b-moe128"]
+    for g in (8, 32):
+        l_bf16 = decode_latency_model(cfg52, g, optimized=True)
+        l_int8 = decode_latency_model(cfg52, g, optimized=True, expert_bytes_per_param=1)
+        emit(f"quant_52B_{g}gpu_decode_projection", l_int8 * 1e6,
+             f"bf16={l_bf16*1e6:.0f}us,experts_int8_speedup={l_bf16/l_int8:.2f}x")
+
+
 SECTIONS = {
     "table3": table3,
     "fig10": fig10,
@@ -187,6 +236,7 @@ SECTIONS = {
     "fig14_15": fig14_15,
     "kernel6x": kernel6x,
     "moe_impl": moe_impl,
+    "quant": quant,
 }
 
 

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.treepath import path_entry
+
 _SAFE = re.compile(r"[^A-Za-z0-9_.-]")
 
 
@@ -23,7 +25,7 @@ def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = "/".join(path_entry(p) for p in path)
         out.append((key, leaf))
     return out, treedef
 
@@ -42,15 +44,44 @@ def save(path: str, tree: Any, *, step: int = 0, extra: dict | None = None) -> N
 
 
 def load(path: str, like: Any) -> tuple[Any, int]:
-    """Restore into the structure of ``like`` (shape/dtype-checked)."""
-    with open(os.path.join(path, "manifest.json")) as f:
+    """Restore into the structure of ``like`` (shape/dtype-checked).
+
+    Fails with an informative ``ValueError`` when the manifest and ``like``
+    disagree — the common cases being a checkpoint saved from a different
+    architecture, or fp weights loaded into a quantized (``QuantizedArray``)
+    tree / vice versa, where whole ``q``/``scale`` leaves go missing.
+    """
+    manifest_path = os.path.join(path, "manifest.json")
+    if not os.path.exists(manifest_path):
+        raise ValueError(f"no checkpoint at {path!r}: missing manifest.json")
+    with open(manifest_path) as f:
         manifest = json.load(f)
     flat, treedef = _flatten_with_paths(like)
     by_key = {e["key"]: e for e in manifest["leaves"]}
+
+    missing = [key for key, _ in flat if key not in by_key]
+    if missing:
+        raise ValueError(
+            f"checkpoint {path!r} is missing {len(missing)} leaves required by the "
+            f"target structure (first few: {missing[:5]}); was it saved from a "
+            "different architecture or quantization state?"
+        )
+    unused = set(by_key) - {key for key, _ in flat}
+    if unused:
+        raise ValueError(
+            f"checkpoint {path!r} holds {len(unused)} leaves the target structure "
+            f"does not expect (first few: {sorted(unused)[:5]}); refusing a "
+            "partial restore."
+        )
+
     leaves = []
     for key, leaf in flat:
         e = by_key[key]
         arr = np.load(os.path.join(path, e["file"]), mmap_mode="r")
-        assert list(arr.shape) == list(np.shape(leaf)), (key, arr.shape, np.shape(leaf))
+        if list(arr.shape) != list(np.shape(leaf)):
+            raise ValueError(
+                f"checkpoint leaf {key!r}: stored shape {tuple(arr.shape)} != "
+                f"expected {tuple(np.shape(leaf))}"
+            )
         leaves.append(jnp.asarray(arr, dtype=leaf.dtype if hasattr(leaf, "dtype") else None))
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]

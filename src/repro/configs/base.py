@@ -93,6 +93,28 @@ class FFNSpec:
 
 
 @dataclass(frozen=True)
+class QuantConfig:
+    """Weight-only PTQ recipe (MoQ, paper §4; see ``repro/quant``).
+
+    bits:       8 or 4 (int4 packed two nibbles per byte).
+    group_size: contraction inputs sharing one scale (0 = one scale per
+                output channel); must divide the contraction dim (and be
+                even for int4).  Applies to both int8 and int4; leaves with
+                two contraction axes (attention out-proj) always use
+                per-output-channel scales.
+    policy:     which matmul weights to quantize —
+                "experts"       routed expert mats only (the ~3.7x win:
+                                experts are >90% of MoE params),
+                "experts_attn"  + attention projections,
+                "all"           every matmul weight (router/norms stay fp).
+    """
+
+    bits: int = 8
+    group_size: int = 0
+    policy: str = "experts"
+
+
+@dataclass(frozen=True)
 class LayerSpec:
     mixer: object  # AttnSpec | SSMSpec | LRUSpec
     ffn: FFNSpec

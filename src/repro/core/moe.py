@@ -23,6 +23,7 @@ from repro.core import dispatch, dispatch_einsum
 from repro.core.gating import expert_capacity, load_balance_loss, top_k_gating
 from repro.models.modules import dense_init, init_mlp, mlp
 from repro.parallel.sharding import get_mesh, shard_hint
+from repro.quant.qarrays import QuantizedArray
 
 
 # ---------------------------------------------------------------------------
@@ -54,8 +55,18 @@ def init_moe(key, cfg: ModelConfig, spec: FFNSpec, dtype) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def experts_ffn(params: dict, xe: jax.Array, act: str) -> jax.Array:
-    """xe: [E, C, D] -> [E, C, D] — per-expert (Swi)GLU MLP as grouped GEMMs."""
+def experts_ffn(params: dict, xe: jax.Array, act: str, *, backend: str | None = None) -> jax.Array:
+    """xe: [E, C, D] -> [E, C, D] — per-expert (Swi)GLU MLP as grouped GEMMs.
+
+    Quantized expert weights (MoQ, repro/quant) are handled transparently:
+    the int8-per-channel SwiGLU layout takes the Pallas dequant-in-kernel
+    path on TPU (weights stream HBM→VMEM at 1 byte/param); other layouts
+    (int4, group-wise, non-swiglu acts) dequantize into the einsum path.
+    ``backend`` ("kernel" | "ref") pins the quantized path per call —
+    prefer it over the process-wide toggle below when jit caching matters.
+    """
+    if isinstance(params["wi"], QuantizedArray):
+        return _experts_ffn_quant(params, xe, act, backend)
     h = jnp.einsum("ecd,edf->ecf", xe, params["wi"])
     if act == "swiglu":
         h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["wg"])) * h
@@ -64,6 +75,43 @@ def experts_ffn(params: dict, xe: jax.Array, act: str) -> jax.Array:
     else:
         h = jax.nn.relu(h)
     return jnp.einsum("ecf,efd->ecd", h, params["wo"])
+
+
+# Process-wide default for the quantized expert path: None = auto (Pallas
+# kernel on TPU, dequant-einsum reference elsewhere — interpret-mode Pallas is
+# a correctness tool, far too slow to serve from).  "kernel" / "ref" force.
+QUANT_EXPERT_BACKEND = [None]
+
+
+def set_quant_expert_backend(mode) -> None:
+    """Test/benchmark knob.  The flag is read at trace time and is not part
+    of any jit cache key, so changing it drops ALL cached compilations to
+    keep already-jitted engines honest — expensive; per-call sites should
+    pass ``experts_ffn(..., backend=...)`` instead."""
+    assert mode in (None, "kernel", "ref"), mode
+    if QUANT_EXPERT_BACKEND[0] == mode:
+        return
+    QUANT_EXPERT_BACKEND[0] = mode
+    jax.clear_caches()
+
+
+def _experts_ffn_quant(params: dict, xe: jax.Array, act: str, backend: str | None) -> jax.Array:
+    from repro.kernels.expert_mlp_quant import _check_kernel_compat, expert_mlp_quant_ref
+
+    wi, wo = params["wi"], params["wo"]
+    wg = params.get("wg")
+    mode = backend or QUANT_EXPERT_BACKEND[0]
+    if mode is None:
+        mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if mode == "kernel" and act == "swiglu" and _check_kernel_compat(xe, wi, wg, wo):
+        from repro.kernels.ops import fused_expert_mlp_quant
+
+        return fused_expert_mlp_quant(xe, wi, wg, wo)
+    if act == "swiglu":
+        return expert_mlp_quant_ref(xe, wi, wg, wo)
+    h = jnp.einsum("ecd,edf->ecf", xe, wi.dequantize())
+    h = jax.nn.gelu(h) if act == "gelu" else jax.nn.relu(h)
+    return jnp.einsum("ecf,efd->ecd", h, wo.dequantize())
 
 
 # ---------------------------------------------------------------------------
@@ -87,6 +135,17 @@ def moe_layer(
     if impl == "ep" and get_mesh() is not None:
         from repro.core.moe_parallel import moe_layer_ep
 
+        if isinstance(params.get("wi"), QuantizedArray):
+            # shard_map in_specs address raw arrays.  NB this fallback runs
+            # inside the caller's jit, re-widening experts every step —
+            # pure overhead, no bandwidth win.  The engines avoid it by
+            # dequantizing ONCE at load time when cfg.moe_impl == "ep"
+            # (kernel-level dequant stays the single-host serving path).
+            from repro.quant.ptq import dequantize_params
+
+            params = {**params, **dequantize_params(
+                {k: params[k] for k in ("wi", "wg", "wo") if k in params}
+            )}
         y, aux = moe_layer_ep(cfg, spec, params, x)
     else:
         xs = x.reshape(B * S, D)

@@ -11,6 +11,7 @@ import jax
 
 from repro.core.gating import Gating
 from repro.kernels.expert_mlp import expert_mlp_kernel
+from repro.kernels.expert_mlp_quant import expert_mlp_quant
 from repro.kernels.moe_gating import gating_kernel
 
 
@@ -27,3 +28,9 @@ def fused_gating(logits: jax.Array, top_k: int, capacity: int, *, normalize: boo
 
 def fused_expert_mlp(xe, wi, wg, wo):
     return expert_mlp_kernel(xe, wi, wg, wo, interpret=_interpret())
+
+
+def fused_expert_mlp_quant(xe, wi, wg, wo):
+    """wi/wg/wo: int8 per-output-channel QuantizedArrays — tiles dequantized
+    in VMEM right before each MXU dot (kernels/expert_mlp_quant.py)."""
+    return expert_mlp_quant(xe, wi, wg, wo, interpret=_interpret())

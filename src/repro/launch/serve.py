@@ -29,16 +29,67 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--moe-impl", default=None, choices=[None, "einsum", "dense", "ep"])
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=0.0)
+    ap.add_argument("--quant-bits", type=int, default=0, choices=[0, 4, 8],
+                    help="weight-only PTQ before serving (0 = off; MoQ §4)")
+    ap.add_argument("--quant-policy", default="experts",
+                    choices=["experts", "experts_attn", "all"])
+    ap.add_argument("--quant-group-size", type=int, default=0,
+                    help="scale group size along the contraction dim, int8 or int4 "
+                         "(0 = one scale per output channel)")
     args = ap.parse_args()
+    if args.temperature <= 0.0 and (args.top_k or args.top_p):
+        ap.error("--top-k/--top-p have no effect at --temperature 0 (greedy); "
+                 "pass --temperature > 0")
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = make_reduced(cfg)
+    if args.top_k > cfg.vocab_size:
+        ap.error(f"--top-k {args.top_k} exceeds vocab_size {cfg.vocab_size}")
     if args.moe_impl:
         cfg = cfg.replace(moe_impl=args.moe_impl)
 
     params = init_params(cfg, jax.random.PRNGKey(0))
-    if args.ckpt:
+
+    if args.quant_bits:
+        from repro.configs.base import QuantConfig
+        from repro.quant import quantize_params, quantized_leaf_paths, tree_bytes
+
+        qcfg = QuantConfig(bits=args.quant_bits, group_size=args.quant_group_size,
+                           policy=args.quant_policy)
+        fp_bytes = tree_bytes(params)
+        if args.ckpt:
+            # a --ckpt may hold either an already-quantized tree (saved from
+            # quantize_params output) or fp weights to PTQ after loading —
+            # try the quantized structure first, fall back to fp-then-PTQ.
+            try:
+                params, _ = ckpt.load(args.ckpt, quantize_params(params, qcfg))
+            except ValueError as q_err:
+                try:
+                    params, _ = ckpt.load(args.ckpt, params)
+                except ValueError as fp_err:
+                    raise ValueError(
+                        f"--ckpt {args.ckpt!r} matches neither the quantized "
+                        f"structure for {qcfg} ({q_err}) nor the fp structure "
+                        f"({fp_err}); was it saved with different quant "
+                        "bits/group_size/policy?"
+                    ) from fp_err
+                params = quantize_params(params, qcfg)
+        else:
+            params = quantize_params(params, qcfg)
+        if not quantized_leaf_paths(params):
+            print(f"WARNING: quant policy '{args.quant_policy}' matched no "
+                  f"weights in {cfg.name} (dense arch with an experts-only "
+                  "policy?) — serving full precision")
+        print(f"PTQ int{args.quant_bits}/{args.quant_policy}: "
+              f"{fp_bytes/1e6:.1f}MB -> {tree_bytes(params)/1e6:.1f}MB")
+        if cfg.moe_impl == "ep":
+            print("NB: under an active mesh the EP shard_map path serves "
+                  "materialized fp experts (no memory win; see "
+                  "repro.quant.prepare_params_for_serving)")
+    elif args.ckpt:
         params, _ = ckpt.load(args.ckpt, params)
 
     ec = EngineConfig(
@@ -46,6 +97,8 @@ def main() -> None:
         max_prefill=args.prompt_len,
         max_decode=args.new_tokens,
         temperature=args.temperature,
+        top_k=args.top_k,
+        top_p=args.top_p,
     )
     eng = Engine(cfg, params, ec)
 

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.configs.base import AttnSpec, ModelConfig
 from repro.models.modules import apply_rope, dense_init, init_rmsnorm, rmsnorm, softcap
 from repro.parallel.sharding import shard_hint
+from repro.quant.qarrays import materialize
 
 NEG_INF = -1e30
 
@@ -226,7 +227,8 @@ def attention(
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     scale = 1.0 / math.sqrt(dh)
 
-    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    # materialize: dequantizes MoQ-quantized projections, passthrough otherwise
+    q = jnp.einsum("bsd,dhe->bshe", x, materialize(params["wq"]))
     if spec.qk_norm:
         q = rmsnorm(params["q_norm"], q, cfg.rms_eps)
 
@@ -236,8 +238,8 @@ def attention(
             k_pos = cache["pos"]
         else:
             assert memory is not None
-            k = jnp.einsum("btd,dhe->bthe", memory, params["wk"])
-            v = jnp.einsum("btd,dhe->bthe", memory, params["wv"])
+            k = jnp.einsum("btd,dhe->bthe", memory, materialize(params["wk"]))
+            v = jnp.einsum("btd,dhe->bthe", memory, materialize(params["wv"]))
             if spec.qk_norm:
                 k = rmsnorm(params["k_norm"], k, cfg.rms_eps)
             k_pos = (
@@ -254,11 +256,11 @@ def attention(
             if mode == "prefill"
             else cache
         )
-        out = jnp.einsum("bshe,hed->bsd", y, params["wo"])
+        out = jnp.einsum("bshe,hed->bsd", y, materialize(params["wo"]))
         return out, new_cache
 
-    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"])
-    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"])
+    k = jnp.einsum("bsd,dhe->bshe", x, materialize(params["wk"]))
+    v = jnp.einsum("bsd,dhe->bshe", x, materialize(params["wv"]))
     if spec.qk_norm:
         k = rmsnorm(params["k_norm"], k, cfg.rms_eps)
     if spec.use_rope:
@@ -308,5 +310,5 @@ def attention(
         y = shard_hint(y, "batch", "q_seq", None, None)
     else:
         y = shard_hint(y, "batch", "seq", "heads", "head_dim")
-    out = jnp.einsum("bshe,hed->bsd", y, params["wo"])
+    out = jnp.einsum("bshe,hed->bsd", y, materialize(params["wo"]))
     return out, new_cache

@@ -24,6 +24,7 @@ from repro.configs.base import ModelConfig
 from repro.models.modules import dense_init, embed_init, init_rmsnorm, rmsnorm
 from repro.models.transformer import apply_segment, init_segment, init_segment_cache
 from repro.parallel.sharding import shard_hint
+from repro.quant.qarrays import materialize
 
 
 def _dtype(name: str):
@@ -82,7 +83,7 @@ def embed_tokens(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array
 
 def logits_out(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
     x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
-    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    w = params["embed"].T if cfg.tie_embeddings else materialize(params["unembed"])
     logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
     return shard_hint(logits, "batch", "seq", "vocab")
 
@@ -96,7 +97,7 @@ def encode(cfg: ModelConfig, params: dict, source: jax.Array) -> jax.Array:
     """source: [B, T, frontend.embed_dim] (stubbed frontend embeddings) or
     token ids [B, T] if no frontend."""
     if cfg.frontend is not None and source.ndim == 3:
-        x = source.astype(_dtype(cfg.compute_dtype)) @ params["frontend_proj"]
+        x = source.astype(_dtype(cfg.compute_dtype)) @ materialize(params["frontend_proj"])
     else:
         x = embed_tokens(cfg, params, source)
     pos = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
@@ -139,7 +140,7 @@ def forward(
     """Teacher-forced logits [B, S(+P), V]; returns (logits, aux_loss)."""
     x = embed_tokens(cfg, params, tokens)
     if prefix_embeds is not None:
-        pre = prefix_embeds.astype(x.dtype) @ params["frontend_proj"]
+        pre = prefix_embeds.astype(x.dtype) @ materialize(params["frontend_proj"])
         x = jnp.concatenate([pre, x], axis=1)
     S = x.shape[1]
     if positions is None:
@@ -160,7 +161,7 @@ def prefill(
     """Returns (logits for the last position [B, V], filled caches)."""
     x = embed_tokens(cfg, params, tokens)
     if prefix_embeds is not None:
-        pre = prefix_embeds.astype(x.dtype) @ params["frontend_proj"]
+        pre = prefix_embeds.astype(x.dtype) @ materialize(params["frontend_proj"])
         x = jnp.concatenate([pre, x], axis=1)
     S = x.shape[1]
     positions = jnp.arange(S, dtype=jnp.int32)[None]

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.quant.qarrays import materialize
+
 # ---------------------------------------------------------------------------
 # Initializers
 # ---------------------------------------------------------------------------
@@ -62,12 +64,13 @@ def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
 
 
 def mlp(params: dict, x: jax.Array, act: str) -> jax.Array:
-    h = x @ params["wi"]
+    # materialize: dequantizes MoQ-quantized weights, passthrough otherwise
+    h = x @ materialize(params["wi"])
     if act == "swiglu":
-        h = jax.nn.silu(x @ params["wg"]) * h
+        h = jax.nn.silu(x @ materialize(params["wg"])) * h
     else:
         h = act_fn(act)(h)
-    return h @ params["wo"]
+    return h @ materialize(params["wo"])
 
 
 # ---------------------------------------------------------------------------

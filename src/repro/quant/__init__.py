@@ -1,0 +1,31 @@
+"""MoQ-style post-training quantization (DeepSpeed-MoE §4, "3.7x smaller";
+Kim et al. 2022): weight-only int8 / int4 expert compression for serving.
+
+Public surface:
+
+  * :class:`~repro.quant.qarrays.QuantizedArray` — values+scales pytree node
+    that flows through ``jax.jit`` / ``jax.lax.scan`` / the checkpoint
+    manifest exactly like a plain array.
+  * :func:`~repro.quant.ptq.quantize_params` — policy-driven PTQ over a
+    params pytree (experts-only / experts+attention / all matmul weights).
+  * ``kernels/expert_mlp_quant.py`` — Pallas grouped expert MLP that
+    dequantizes int8 weight tiles in VMEM right before the MXU dot.
+"""
+from repro.quant.qarrays import QuantizedArray, materialize
+from repro.quant.ptq import (
+    dequantize_params,
+    prepare_params_for_serving,
+    quantize_params,
+    quantized_leaf_paths,
+    tree_bytes,
+)
+
+__all__ = [
+    "QuantizedArray",
+    "materialize",
+    "quantize_params",
+    "dequantize_params",
+    "prepare_params_for_serving",
+    "quantized_leaf_paths",
+    "tree_bytes",
+]

@@ -1,0 +1,137 @@
+"""Post-training weight-only quantization of a params pytree (MoQ, §4).
+
+A :class:`QuantPolicy` decides which leaves to quantize by their key path:
+
+  * ``experts``       — only the routed expert matrices (``moe/{wi,wg,wo}``).
+    Expert weights are >90% of MoE params, so this alone is the paper's
+    ~3.7x model-size win while leaving the dense "critical data path"
+    (attention, shared FFN, router, norms, embeddings) at full precision.
+  * ``experts_attn``  — experts + attention projections.
+  * ``all``           — every matmul weight (experts, attention, dense FFNs,
+    residual-MoE branch, unembed, frontend projector).  Router logits and
+    norms always stay fp (they are tiny and accuracy-critical).
+
+Each leaf is quantized with the contraction axes of the matmul it feeds, so
+scales are per-*output*-channel (or per group of ``group_size`` inputs for
+int4) and dequantization is a broadcast multiply.
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import numpy as np
+
+from repro.configs.base import QuantConfig
+from repro.quant.qarrays import QuantizedArray
+from repro.treepath import path_names as _path_names
+
+# Key-path → contraction-axes table.  Axes are negative (end-relative) so the
+# same rule applies to [D,F] dense mats and scan-stacked [R,E,D,F] experts.
+_EXPERT_KEYS = ("wi", "wg", "wo")
+_ATTN_QKV_AXES = (-3,)  # wq/wk/wv: [D, H, dh] contract D
+_ATTN_WO_AXES = (-3, -2)  # wo: [H, dh, D] contract (H, dh)
+_MATMUL_AXES = (-2,)  # [.., Din, Dout] contract Din
+
+
+def _rule_for(path_names: List[str], policy: str):
+    """Returns contraction axes for a quantizable leaf, or None to skip."""
+    leaf = path_names[-1]
+    inside = set(path_names[:-1])
+    if "moe" in inside and leaf in _EXPERT_KEYS and "residual" not in inside:
+        return _MATMUL_AXES  # stacked [.., E, Din, Dout] expert mats
+    if policy == "experts":
+        return None
+    if ("attn" in inside or "cross" in inside) and leaf in ("wq", "wk", "wv", "wo"):
+        return _ATTN_WO_AXES if leaf == "wo" else _ATTN_QKV_AXES
+    if policy != "all":
+        return None
+    if ("ffn" in inside or "residual" in inside) and leaf in _EXPERT_KEYS:
+        return _MATMUL_AXES
+    if leaf in ("unembed", "frontend_proj"):
+        return _MATMUL_AXES
+    return None
+
+
+def quantize_params(params: Any, qcfg: QuantConfig) -> Any:
+    """Quantize matmul weights of ``params`` per ``qcfg``; everything else
+    (router, norms, embeddings, caches-to-be) passes through untouched."""
+    if qcfg.policy not in ("experts", "experts_attn", "all"):
+        raise ValueError(f"unknown quant policy {qcfg.policy!r}")
+
+    def visit(path, leaf):
+        axes = _rule_for(_path_names(path), qcfg.policy)
+        if axes is None:
+            return leaf
+        # group-wise scaling (int8 or int4) only applies along a single
+        # contraction axis; the attention out-proj has two, so it falls back
+        # to per-output-channel there.
+        gs = qcfg.group_size if len(axes) == 1 else 0
+        return QuantizedArray.quantize(leaf, bits=qcfg.bits, group_size=gs, reduce_axes=axes)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def dequantize_params(params: Any) -> Any:
+    """Materialize every QuantizedArray leaf back to fp (debug / ep path)."""
+    return jax.tree_util.tree_map(
+        lambda l: l.dequantize() if isinstance(l, QuantizedArray) else l,
+        params,
+        is_leaf=lambda l: isinstance(l, QuantizedArray),
+    )
+
+
+def prepare_params_for_serving(cfg, params: Any) -> Any:
+    """Single home for the serving/quantization interaction rule: the
+    explicit expert-parallel shard_map path addresses raw expert arrays, so
+    when it will actually run (``moe_impl == "ep"`` under an active mesh)
+    quantized *expert* leaves are materialized ONCE here — not per step
+    inside the jitted decode.  Everything else (attention, unembed, dense
+    FFNs) consumes QuantizedArray leaves natively at its matmul site and
+    passes through untouched, keeping those policies' memory savings.  (If
+    a mesh is entered only after engine construction, moe_layer's in-jit
+    fallback still keeps results correct, just without the bytes win.)"""
+    from repro.parallel.sharding import get_mesh
+
+    if getattr(cfg, "moe_impl", None) != "ep" or get_mesh() is None:
+        return params
+
+    def visit(path, leaf):
+        if isinstance(leaf, QuantizedArray):
+            names = _path_names(path)
+            # only the routed expert mats directly under "moe" feed the
+            # shard_map; the residual dense branch (moe/residual/*) keeps
+            # its QuantizedArray leaves (mlp() materializes them in place)
+            if len(names) >= 2 and names[-2] == "moe" and names[-1] in _EXPERT_KEYS:
+                return leaf.dequantize()
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda l: isinstance(l, QuantizedArray)
+    )
+
+
+def quantized_leaf_paths(params: Any) -> List[str]:
+    """'/'-joined key paths of the quantized leaves (tests / reporting)."""
+    out = []
+
+    def visit(path, leaf):
+        if isinstance(leaf, QuantizedArray):
+            out.append("/".join(_path_names(path)))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params, is_leaf=lambda l: isinstance(l, QuantizedArray))
+    return out
+
+
+def tree_bytes(params: Any, *, only_quantized: bool = False) -> int:
+    """Total parameter bytes; QuantizedArray counts packed ints + scales."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda l: isinstance(l, QuantizedArray)
+    ):
+        if isinstance(leaf, QuantizedArray):
+            total += leaf.nbytes
+        elif not only_quantized:
+            total += int(np.prod(np.shape(leaf))) * np.dtype(leaf.dtype).itemsize
+    return total

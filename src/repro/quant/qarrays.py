@@ -1,0 +1,182 @@
+"""``QuantizedArray``: a weight tensor stored as integer values + f32 scales.
+
+Registered as a JAX pytree node (with attr keys, so the checkpoint manifest
+sees ``.../wi/q`` and ``.../wi/scale`` leaves), which makes quantized params
+flow through ``jax.jit``, ``jax.lax.scan`` over stacked layer params, and
+``checkpoint/ckpt.py`` without any special-casing: every transformation that
+slices / stacks the leading (scan) axis slices ``q`` and ``scale``
+consistently because both carry the same leading dims.
+
+Quantization is symmetric:
+
+  * int8  — per-output-channel: one scale per output column, amax taken over
+    the contraction axes (``reduce_axes``).
+  * int4  — group-wise along the first contraction axis (``group_size``
+    inputs share a scale), packed two nibbles per int8 byte along that axis.
+    ``group_size=0`` degrades to per-output-channel int4.
+
+``reduce_axes`` are stored relative to the *end* of the shape (negative), so
+metadata stays valid when scan/vmap adds or strips leading stack axes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = {8: 127.0, 4: 7.0}
+
+
+def _norm_neg_axis(axis: int, ndim: int) -> int:
+    """Normalize to a negative axis index (stable under added leading dims)."""
+    ax = axis % ndim
+    return ax - ndim
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class QuantizedArray:
+    """values (``q``, int8 storage) + scales (``scale``, f32) + metadata."""
+
+    __slots__ = ("q", "scale", "bits", "group_size", "axis", "orig_dtype")
+
+    def __init__(self, q, scale, bits: int, group_size: int, axis: int, orig_dtype: str):
+        self.q = q
+        self.scale = scale
+        self.bits = bits  # 8 | 4
+        self.group_size = group_size  # 0 = per-output-channel
+        self.axis = axis  # negative: pack/group (first contraction) axis
+        self.orig_dtype = orig_dtype
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten_with_keys(self):
+        children = (
+            (jax.tree_util.GetAttrKey("q"), self.q),
+            (jax.tree_util.GetAttrKey("scale"), self.scale),
+        )
+        return children, (self.bits, self.group_size, self.axis, self.orig_dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        return cls(q, scale, *aux)
+
+    # -- array-ish surface --------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        s = list(jnp.shape(self.q))
+        if self.bits == 4:
+            s[self.axis] *= 2  # two nibbles per stored byte along the pack axis
+        return tuple(s)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.orig_dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.q.size * self.q.dtype.itemsize + self.scale.size * self.scale.dtype.itemsize)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"QuantizedArray(int{self.bits}, shape={self.shape}, "
+            f"group_size={self.group_size}, axis={self.axis}, orig={self.orig_dtype})"
+        )
+
+    # -- numerics -----------------------------------------------------------
+    @classmethod
+    def quantize(
+        cls,
+        w: jax.Array,
+        *,
+        bits: int = 8,
+        group_size: int = 0,
+        reduce_axes: Tuple[int, ...] = (-2,),
+    ) -> "QuantizedArray":
+        """Symmetric weight quantization of ``w``.
+
+        ``reduce_axes`` are the contraction axes of the matmul ``w`` feeds
+        (amax is taken over them; the remaining axes are per-channel).
+        Grouping/packing happens along ``reduce_axes[0]``.
+        """
+        if bits not in _QMAX:
+            raise ValueError(f"bits must be 4 or 8, got {bits}")
+        nd = w.ndim
+        axes = tuple(_norm_neg_axis(a, nd) for a in reduce_axes)
+        ax = axes[0] % nd
+        qmax = _QMAX[bits]
+        w32 = jnp.asarray(w, jnp.float32)
+
+        if group_size > 0:
+            din = w.shape[ax]
+            if din % group_size:
+                raise ValueError(f"group_size {group_size} must divide axis dim {din}")
+            if bits == 4 and group_size % 2:
+                raise ValueError("int4 group_size must be even (nibble packing)")
+            n_groups = din // group_size
+            gshape = w.shape[:ax] + (n_groups, group_size) + w.shape[ax + 1 :]
+            wg = w32.reshape(gshape)
+            red = (ax + 1,) + tuple((a % nd) + (1 if (a % nd) > ax else 0) for a in axes[1:])
+            amax = jnp.max(jnp.abs(wg), axis=red, keepdims=True)
+            scale = jnp.maximum(amax, 1e-8) / qmax
+            q = jnp.clip(jnp.round(wg / scale), -qmax, qmax).astype(jnp.int8).reshape(w.shape)
+            scale = jnp.squeeze(scale, axis=ax + 1)  # [..., n_groups, <1s for other axes>]
+        else:
+            amax = jnp.max(jnp.abs(w32), axis=axes, keepdims=True)
+            scale = jnp.maximum(amax, 1e-8) / qmax
+            q = jnp.clip(jnp.round(w32 / scale), -qmax, qmax).astype(jnp.int8)
+
+        if bits == 4:
+            if w.shape[ax] % 2:
+                raise ValueError(f"int4 needs an even dim on axis {ax}, got {w.shape[ax]}")
+            q = _pack_int4(q, ax)
+
+        return cls(q, scale, bits, group_size, _norm_neg_axis(ax, nd), str(w.dtype))
+
+    def dequantize(self) -> jax.Array:
+        q = self.q
+        if self.bits == 4:
+            q = _unpack_int4(q, self.axis)
+        w = q.astype(jnp.float32)
+        if self.group_size > 0:
+            ax = self.axis % w.ndim
+            shape = w.shape
+            n_groups = shape[ax] // self.group_size
+            w = w.reshape(shape[:ax] + (n_groups, self.group_size) + shape[ax + 1 :])
+            w = w * jnp.expand_dims(self.scale, axis=ax + 1)
+            w = w.reshape(shape)
+        else:
+            w = w * self.scale
+        return w.astype(self.dtype)
+
+
+def _pack_int4(q: jax.Array, ax: int) -> jax.Array:
+    """Pack adjacent int4 pairs along ``ax``: element i holds (2i | 2i+1<<4)."""
+    qm = jnp.moveaxis(q, ax, -1).astype(jnp.int32)
+    lo = qm[..., 0::2] & 0xF
+    hi = qm[..., 1::2] & 0xF
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return jnp.moveaxis(jax.lax.bitcast_convert_type(packed, jnp.int8), -1, ax)
+
+
+def _unpack_int4(q: jax.Array, ax: int) -> jax.Array:
+    """Inverse of :func:`_pack_int4`; returns sign-extended int8 nibbles."""
+    qm = jnp.moveaxis(q, ax, -1).astype(jnp.int32) & 0xFF
+    lo = qm & 0xF
+    hi = (qm >> 4) & 0xF
+    lo = lo - 16 * (lo > 7)
+    hi = hi - 16 * (hi > 7)
+    inter = jnp.stack([lo, hi], axis=-1).reshape(qm.shape[:-1] + (qm.shape[-1] * 2,))
+    return jnp.moveaxis(inter.astype(jnp.int8), -1, ax)
+
+
+def materialize(w):
+    """Dequantize if quantized, else pass through — the one-line hook that
+    lets every matmul site accept fp or quantized weights transparently."""
+    if isinstance(w, QuantizedArray):
+        return w.dequantize()
+    return w

@@ -37,15 +37,23 @@ class SlotState:
 
 class ContinuousEngine:
     """Slot-pool continuous batching.  ``step()`` = one decode tick; requests
-    are admitted on submit() whenever a slot is free."""
+    are admitted on submit() whenever a slot is free.
+
+    Like ``Engine``, accepts MoQ-quantized params (``QuantizedArray`` leaves
+    from ``repro.quant.quantize_params``) transparently."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4, capacity: int = 256,
-                 temperature: float = 0.0, eos_id: int = -1, seed: int = 0):
+                 temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
+                 eos_id: int = -1, seed: int = 0):
         self.cfg = cfg
-        self.params = params
+        from repro.quant import prepare_params_for_serving
+
+        self.params = prepare_params_for_serving(cfg, params)
         self.n_slots = slots
         self.capacity = capacity
         self.temperature = temperature
+        self.top_k = top_k
+        self.top_p = top_p
         self.eos_id = eos_id
         self.caches = init_caches(cfg, slots, capacity)
         self.slots = [SlotState() for _ in range(slots)]
@@ -88,7 +96,8 @@ class ContinuousEngine:
                 self.params, toks, pos, jnp.asarray(i, jnp.int32), self.caches
             )
             self._key, sub = jax.random.split(self._key)
-            first = int(sample(logits, sub, temperature=self.temperature)[0])
+            first = int(sample(logits, sub, temperature=self.temperature,
+                               top_k=self.top_k, top_p=self.top_p)[0])
             self.slots[i] = SlotState(
                 request_id=rid, pos=len(prompt), generated=[first],
                 budget=req.max_new_tokens, active=True,
@@ -124,7 +133,8 @@ class ContinuousEngine:
             self.params, tokens, jnp.asarray(positions), jnp.asarray(active), self.caches
         )
         self._key, sub = jax.random.split(self._key)
-        nxt = np.asarray(sample(logits, sub, temperature=self.temperature))
+        nxt = np.asarray(sample(logits, sub, temperature=self.temperature,
+                                top_k=self.top_k, top_p=self.top_p))
         for i, slot in enumerate(self.slots):
             if not slot.active:
                 continue

@@ -34,6 +34,7 @@ class EngineConfig:
     max_decode: int = 64
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 0.0  # nucleus sampling mass; 0 = off
     eos_id: int = -1  # -1: never stop early
     pad_id: int = 0
 
@@ -51,11 +52,19 @@ class Response:
 
 
 class Engine:
-    """Synchronous batched engine; one jitted prefill + one jitted decode."""
+    """Synchronous batched engine; one jitted prefill + one jitted decode.
+
+    ``params`` may be a full-precision pytree or the output of
+    ``repro.quant.quantize_params`` — ``QuantizedArray`` leaves flow through
+    the jitted steps unchanged and are dequantized at their matmul sites
+    (MoQ serving, paper §4: expert bytes shrink ~4x/8x with int8/int4).
+    """
 
     def __init__(self, cfg: ModelConfig, params, ec: EngineConfig, *, memory=None, prefix_embeds=None):
         self.cfg = cfg
-        self.params = params
+        from repro.quant import prepare_params_for_serving
+
+        self.params = params = prepare_params_for_serving(cfg, params)
         self.ec = ec
         self.memory = memory
         self.prefix_embeds = prefix_embeds
@@ -108,7 +117,7 @@ class Engine:
         max_new = min(max(r.max_new_tokens for r in reqs), ec.max_decode)
         generated = np.zeros((B, max_new), np.int32)
         done = np.zeros((B,), bool)
-        cur = sample(logits, key, temperature=ec.temperature, top_k=ec.top_k)
+        cur = sample(logits, key, temperature=ec.temperature, top_k=ec.top_k, top_p=ec.top_p)
         for t in range(max_new):
             generated[:, t] = np.asarray(cur)
             done |= generated[:, t] == ec.eos_id
@@ -118,7 +127,7 @@ class Engine:
             key, sub = jax.random.split(key)
             idx = jnp.asarray(S + offset + t, jnp.int32)
             logits, caches = self._decode(self.params, cur[:, None], idx, caches, self.memory)
-            cur = sample(logits, sub, temperature=ec.temperature, top_k=ec.top_k)
+            cur = sample(logits, sub, temperature=ec.temperature, top_k=ec.top_k, top_p=ec.top_p)
 
         res = []
         for i, r in enumerate(reqs):

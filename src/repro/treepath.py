@@ -1,0 +1,19 @@
+"""Pytree key-path stringification shared by the checkpoint manifest and the
+quantization policy matcher (one definition so manifest keys and policy paths
+can never diverge for the same tree)."""
+from __future__ import annotations
+
+from typing import List
+
+
+def path_entry(p) -> str:
+    """Stable string for one key-path entry: DictKey -> key, SequenceKey ->
+    idx, GetAttrKey (e.g. QuantizedArray's .q/.scale children) -> name."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def path_names(path) -> List[str]:
+    return [path_entry(p) for p in path]

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or a single-draw fallback shim
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or a single-draw fallback shim
 
 from repro.kernels.ops import fused_expert_mlp, fused_gating
 from repro.kernels.ref import expert_mlp_ref, gating_ref

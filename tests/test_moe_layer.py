@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or a single-draw fallback shim
 
 from repro.configs.base import FFNSpec, ModelConfig
 from repro.core import dispatch, dispatch_einsum

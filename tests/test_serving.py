@@ -108,3 +108,39 @@ class TestSampling:
         for seed in range(20):
             t = sample(logits, jax.random.PRNGKey(seed), temperature=1.0, top_k=2)
             assert int(t[0]) in (1, 2)
+
+    def test_topp_restricts_to_nucleus(self):
+        # probs ~ [0.64, 0.23, 0.09, 0.03, ...]: top_p=0.6 keeps only token 0,
+        # top_p=0.8 keeps {0, 1} (the first token crossing the mass threshold
+        # is included).
+        logits = jnp.asarray([[4.0, 3.0, 2.0, 1.0, 0.0]])
+        for seed in range(20):
+            t = sample(logits, jax.random.PRNGKey(seed), temperature=1.0, top_p=0.6)
+            assert int(t[0]) == 0
+            t = sample(logits, jax.random.PRNGKey(seed), temperature=1.0, top_p=0.8)
+            assert int(t[0]) in (0, 1)
+
+    @pytest.mark.parametrize("top_p", [0.0, 1.0])
+    def test_topp_boundaries_keep_full_distribution(self, top_p):
+        # both 0.0 (off) and 1.0 (whole nucleus) must leave the distribution
+        # intact — the filter only engages strictly inside (0, 1)
+        logits = jnp.asarray([[0.0, 1.0, 2.0]])
+        seen = {
+            int(sample(logits, jax.random.PRNGKey(s), temperature=2.0, top_p=top_p)[0])
+            for s in range(40)
+        }
+        assert seen == {0, 1, 2}
+
+    def test_topp_composes_with_topk(self):
+        logits = jnp.asarray([[5.0, 4.9, 4.8, -1.0]])
+        for seed in range(20):
+            t = sample(logits, jax.random.PRNGKey(seed), temperature=1.0, top_k=2, top_p=0.99)
+            assert int(t[0]) in (0, 1)
+
+    def test_engine_threads_topp(self):
+        cfg = make_reduced(all_configs()["llama3-8b"])
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        ec = EngineConfig(max_batch=2, max_prefill=16, max_decode=4,
+                          temperature=1.0, top_p=0.9)
+        out = Engine(cfg, params, ec).generate([Request(prompt=[1, 2, 3], max_new_tokens=4)])
+        assert len(out[0].tokens) == 4

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or a single-draw fallback shim
 
 from repro.configs.base import LRUSpec, ModelConfig, SSMSpec
 from repro.models.rglru import init_lru, init_lru_cache, lru_layer, lru_scan
