@@ -1,10 +1,17 @@
-.PHONY: test test-quant bench-quant
+.PHONY: test test-quant test-dist bench-quant bench-kv
 
 test:
 	sh scripts/ci.sh
 
 test-quant:
-	PYTHONPATH=src python -m pytest -q tests/test_quant.py
+	PYTHONPATH=src python -m pytest -q tests/test_quant.py tests/test_kv_quant.py
+
+test-dist:
+	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		python -m pytest -q -m dist tests/test_dist.py
 
 bench-quant:
 	PYTHONPATH=src python -m benchmarks.run quant
+
+bench-kv:
+	PYTHONPATH=src python -m benchmarks.run kv_quant

@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   moe_impl — full MoE layer wall-clock, einsum vs dense dispatch (CPU)
   quant    — MoQ expert PTQ: bytes int8/int4 vs fp32, CPU overhead, and the
              projected decode-latency win at 1 byte/param (§4)
+  kv_quant — int8 KV cache: cache bytes/token fp vs quantized, decode-step
+             wall-clock with fp vs int8 caches (CPU ref path), batch-size
+             headroom at a fixed cache-memory budget
 
 Run: PYTHONPATH=src python -m benchmarks.run [section ...]
 """
@@ -227,6 +230,44 @@ def quant() -> None:
              f"bf16={l_bf16*1e6:.0f}us,experts_int8_speedup={l_bf16/l_int8:.2f}x")
 
 
+def kv_quant() -> None:
+    """Quantized KV cache (serving): (a) cache bytes/token fp32 vs int8 +
+    per-(head, timestep) scales, (b) measured decode-step wall-clock with
+    fp vs int8 caches on the CPU dequant path (TPU uses the Pallas
+    dequant-in-kernel decode attention), (c) the batch-headroom implication
+    at a fixed cache-memory budget — decode batch ∝ 1/cache-bytes when the
+    §5 memory-bound regime is cache-dominated."""
+    from repro.core.prmoe import nlg_moe
+    from repro.models.model import decode_step, init_caches, init_params, prefill
+    from repro.quant import kv_cache_bytes
+
+    cfg = nlg_moe("kv-bench", 4, 256, 4, 16, vocab=1024).replace(
+        param_dtype="float32", compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S, cap = 8, 64, 128
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0, cfg.vocab_size)
+
+    rows = {}
+    for bits in (0, 8):
+        tag = f"int{bits}" if bits else "fp32"
+        caches = init_caches(cfg, B, cap, kv_bits=bits)
+        nbytes = kv_cache_bytes(caches)
+        per_tok = nbytes / (B * cap)
+        emit(f"kv_quant_cache_bytes_{tag}", 0.0,
+             f"total={nbytes},per_slot_token={per_tok:.1f}B")
+        rows[bits] = nbytes
+
+        _, filled = jax.jit(lambda p, t, c: prefill(cfg, p, t, c))(params, toks[:, :S], caches)
+        f_dec = jax.jit(lambda p, t, i, c: decode_step(cfg, p, t, i, c))
+        us = time_fn(lambda: f_dec(params, toks[:, S:], jnp.asarray(S, jnp.int32), filled),
+                     iters=10, warmup=3)
+        emit(f"kv_quant_decode_step_{tag}", us, f"B={B},cap={cap}")
+
+    red = rows[0] / rows[8]
+    emit("kv_quant_byte_reduction", 0.0,
+         f"{red:.2f}x_fewer_cache_bytes,batch_headroom_at_fixed_budget={red:.2f}x")
+
+
 SECTIONS = {
     "table3": table3,
     "fig10": fig10,
@@ -237,6 +278,7 @@ SECTIONS = {
     "kernel6x": kernel6x,
     "moe_impl": moe_impl,
     "quant": quant,
+    "kv_quant": kv_quant,
 }
 
 

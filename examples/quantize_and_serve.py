@@ -1,10 +1,13 @@
 """MoQ quickstart (paper §4): train a small MoE briefly, quantize its expert
 weights to int8, round-trip the quantized params through a checkpoint, and
-serve fp vs quantized side by side.
+serve fp vs quantized side by side — then add the int8 KV cache on top so
+int8 experts AND an int8 cache serve together from one engine (the two §5
+memory-bound levers composed).
 
   PYTHONPATH=src python examples/quantize_and_serve.py
 
-Expected: expert bytes shrink ~4x, greedy generations match almost exactly.
+Expected: expert bytes shrink ~4x, KV-cache bytes ~3.7x, greedy generations
+match (almost) exactly in both steps.
 """
 import os
 import tempfile
@@ -67,6 +70,24 @@ def main() -> None:
           f"({100.0 * match / tot:.1f}%)")
     print("fp   sample:", fp_out[0].tokens)
     print("int8 sample:", q_out[0].tokens)
+
+    # --- compose the int8 KV cache on top (quant/kv.py) -------------------
+    from repro.quant import kv_cache_bytes
+
+    ec_kv = EngineConfig(max_batch=8, max_prefill=32, max_decode=16, kv_cache_bits=8)
+    eng_kv = Engine(cfg, qparams, ec_kv)
+    kv_out = eng_kv.generate(reqs)
+    fp_cache_b = kv_cache_bytes(Engine(cfg, qparams, ec)._make_caches(8))
+    q_cache_b = kv_cache_bytes(eng_kv._make_caches(8))
+    print(f"KV cache bytes: fp32={fp_cache_b/1e6:.2f}MB -> int8={q_cache_b/1e6:.2f}MB "
+          f"({fp_cache_b/q_cache_b:.2f}x fewer decode cache bytes)")
+    tot = match = 0
+    for a, b in zip(fp_out, kv_out):
+        tot += len(a.tokens)
+        match += sum(int(x == y) for x, y in zip(a.tokens, b.tokens))
+    print(f"greedy token agreement fp vs int8 experts + int8 KV: {match}/{tot} "
+          f"({100.0 * match / tot:.1f}%)")
+    print("int8+kv sample:", kv_out[0].tokens)
 
 
 if __name__ == "__main__":

@@ -1,15 +1,20 @@
 #!/usr/bin/env sh
-# Single CI entrypoint (`make test`): quant subsystem module first (fast,
-# covers the newest code), then the tier-1 suite minus the seed's known-red
-# set (all of tests/test_dist.py + 2 HLO-accounting tests), so a green exit
-# means "no worse than seed".  Shrink the exclusion list as those get fixed;
-# the raw tier-1 command stays `PYTHONPATH=src python -m pytest -x -q`.
+# Single CI entrypoint (`make test`): the newest subsystems first (fast
+# signal), then the full tier-1 suite, then the multi-device dist suite as
+# its own stage (subprocesses under an 8-device host platform).  All three
+# stages are green as of PR 2 — the seed's red set (8 dist + 2 HLO
+# accounting) was repaired there.  The raw tier-1 command stays
+# `PYTHONPATH=src python -m pytest -x -q`.
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-python -m pytest -q tests/test_quant.py
-python -m pytest -x -q \
-  --ignore=tests/test_dist.py \
-  --deselect tests/test_system.py::TestHLOAccounting::test_trip_count_multiplication \
-  --deselect tests/test_system.py::TestHLOAccounting::test_collectives_counted
+python -m pytest -q tests/test_quant.py tests/test_kv_quant.py
+python -m pytest -x -q --ignore=tests/test_dist.py
+
+# dist tier (jax-compat shim in parallel/compat.py + the dense-dispatch
+# partial-sum-gather fix keep it green; the marker lets it be selected /
+# skipped explicitly).  The subprocess scripts set their own XLA_FLAGS;
+# exporting here too covers any future in-process multi-device test.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest -q -m dist tests/test_dist.py

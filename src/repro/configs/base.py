@@ -107,11 +107,19 @@ class QuantConfig:
                                 experts are >90% of MoE params),
                 "experts_attn"  + attention projections,
                 "all"           every matmul weight (router/norms stay fp).
+    kv_cache_bits: serving-time KV-cache quantization — 0 (fp, default) or
+                8 (int8 with per-head, per-timestep f32 scales; see
+                repro/quant/kv.py).  Orthogonal to the weight policy: the
+                cache is activation state, quantized on write during
+                prefill/decode, not by quantize_params.  Engines read this
+                knob when allocating caches (EngineConfig.kv_cache_bits /
+                ContinuousEngine(kv_cache_bits=...)).
     """
 
     bits: int = 8
     group_size: int = 0
     policy: str = "experts"
+    kv_cache_bits: int = 0
 
 
 @dataclass(frozen=True)

@@ -161,5 +161,9 @@ def make_reduced(cfg: ModelConfig, d_model: int = 128) -> ModelConfig:
         max_seq_len=4096,
         param_dtype="float32",
         compute_dtype="float32",
-        moe_impl="dense",
+        # moe_impl is preserved: without a mesh, "ep" falls back to dense
+        # dispatch anyway, and under a mesh the shard_map EP path is the one
+        # that partitions correctly (the GSPMD-partitioned dense scatter/
+        # gather dispatch miscomputes under grad on older XLA SPMD — see
+        # core/dispatch.py::combine_dense).
     )

@@ -44,7 +44,27 @@ def combine_dense(ye: jax.Array, g: Gating, capacity: int, num_experts: int) -> 
 
 
 def moe_dense(x: jax.Array, g: Gating, capacity: int, num_experts: int, expert_fn):
-    """Dense-dispatch MoE: scatter -> expert_fn([E,C,D]) -> gather-combine."""
+    """Dense-dispatch MoE: scatter -> expert_fn([E,C,D]) -> gather-combine.
+
+    This is the GSPMD (non-shard_map) path; the EP implementation calls
+    dispatch_dense/combine_dense directly inside its shard_map body instead.
+    """
     xe = dispatch_dense(x, g, capacity, num_experts)
     ye = expert_fn(xe)
+    # Pin the expert outputs to a concrete replicated sharding BEFORE the
+    # combine gather.  With d_ff tensor-sliced over 'model', ye carries a
+    # pending cross-shard partial sum, and older XLA SPMD partitioners
+    # mis-partition a gather over such an operand (observed on the CPU
+    # backend: combine returned exactly TP× the correct values; the grad
+    # program stays wrong regardless, which is why multi-device training
+    # uses the shard_map EP path, not this one).  No-op without a mesh.
+    from repro.parallel.sharding import get_mesh
+
+    mesh = get_mesh()
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        ye = jax.lax.with_sharding_constraint(
+            ye, NamedSharding(mesh, PartitionSpec(None, None, None))
+        )
     return combine_dense(ye, g, capacity, num_experts)

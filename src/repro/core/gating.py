@@ -94,14 +94,24 @@ def top_k_gating(
     return Gating(expert_idx.astype(jnp.int32), combine_w, position.astype(jnp.int32), keep, probs)
 
 
-def load_balance_loss(probs: jax.Array, expert_idx: jax.Array, num_experts: int) -> jax.Array:
-    """Switch-Transformer auxiliary loss: E * sum_e f_e * P_e (paper Table 1:
-    'MoE loss coefficient' scales this in the total loss).  f_e counts primary
-    (k=0) assignments; P_e is the mean router probability."""
+def load_balance_stats(probs: jax.Array, expert_idx: jax.Array, num_experts: int):
+    """Per-expert (f_e, P_e): fraction of primary (k=0) assignments and mean
+    router probability.  Split out so expert-parallel shards can pmean these
+    *linear* statistics across the EP axis before taking the product — the
+    loss is nonlinear in (f, P), so averaging per-shard losses would NOT
+    equal the global-batch loss."""
     T = probs.shape[0]
     primary = expert_idx[:, 0]
     f = jnp.bincount(primary, length=num_experts).astype(jnp.float32) / T
     p = jnp.mean(probs, axis=0)
+    return f, p
+
+
+def load_balance_loss(probs: jax.Array, expert_idx: jax.Array, num_experts: int) -> jax.Array:
+    """Switch-Transformer auxiliary loss: E * sum_e f_e * P_e (paper Table 1:
+    'MoE loss coefficient' scales this in the total loss).  f_e counts primary
+    (k=0) assignments; P_e is the mean router probability."""
+    f, p = load_balance_stats(probs, expert_idx, num_experts)
     return num_experts * jnp.sum(f * p)
 
 

@@ -29,6 +29,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import FFNSpec, ModelConfig
 from repro.core.dispatch import combine_dense, dispatch_dense
 from repro.core.gating import expert_capacity, load_balance_loss, top_k_gating
+from repro.parallel.compat import axis_size, shard_map
 from repro.parallel.sharding import get_mesh
 
 EP_AXIS = "data"
@@ -85,7 +86,7 @@ def _moe_body(cfg: ModelConfig, spec: FFNSpec, mesh, hier: bool, x_loc, router, 
     B_loc, S, D = x_loc.shape
     E = spec.num_experts
     K = spec.top_k
-    ep = jax.lax.axis_size(EP_AXIS) * (jax.lax.axis_size("pod") if hier else 1)
+    ep = axis_size(EP_AXIS) * (axis_size("pod") if hier else 1)
     E_loc = E // ep
     T_loc = B_loc * S
     cap = expert_capacity(T_loc, E, K, spec.capacity_factor)
@@ -127,9 +128,17 @@ def _moe_body(cfg: ModelConfig, spec: FFNSpec, mesh, hier: bool, x_loc, router, 
     back = _bwd_cast(back)
     y = combine_dense(back, g, cap, E).reshape(B_loc, S, D)
 
-    aux = load_balance_loss(g.probs, g.expert_idx, E)
+    # Global-batch load balance: pmean the per-expert stats (linear in the
+    # tokens) across EP shards, THEN take the product — numerically identical
+    # to the single-device dense path (per-shard losses averaged would not
+    # be, the loss being nonlinear in f and P).
+    from repro.core.gating import load_balance_stats
+
+    f, p = load_balance_stats(g.probs, g.expert_idx, E)
     axes = [EP_AXIS] + (["pod"] if _axis_in_mesh(mesh, "pod") else [])
-    aux = jax.lax.pmean(aux, tuple(axes))
+    f = jax.lax.pmean(f, tuple(axes))
+    p = jax.lax.pmean(p, tuple(axes))
+    aux = E * jnp.sum(f * p)
     return y, aux
 
 
@@ -142,7 +151,7 @@ def _moe_body_allgather(cfg: ModelConfig, spec: FFNSpec, mesh, x_loc, router, wi
     decode iteration 1)."""
     B_loc, S, D = x_loc.shape
     E, K = spec.num_experts, spec.top_k
-    ep = jax.lax.axis_size(EP_AXIS)
+    ep = axis_size(EP_AXIS)
     E_loc = E // ep
     my_ep = jax.lax.axis_index(EP_AXIS)
 
@@ -222,11 +231,27 @@ def moe_layer_ep(cfg: ModelConfig, spec: FFNSpec, params: dict, x: jax.Array) ->
     else:
         body = partial(_moe_body, cfg, spec, mesh, hier)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(x_spec, router_spec, wi_spec, wi_spec, wo_spec),
         out_specs=(x_spec, P()),
         check_vma=True,
     )
-    return fn(x, params["router"], params["wi"], wg, params["wo"])
+    # Pin every operand to its in_spec with an explicit constraint before the
+    # shard_map boundary.  Without this, older XLA SPMD partitioners can feed
+    # the manual computation a mis-resharded operand when the producer is
+    # itself a partitioned gather/slice (observed on the CPU backend: a
+    # sharded-embedding lookup flowing straight into this shard_map produced
+    # O(1)-wrong expert outputs); the constraint forces a fully materialized
+    # reshard first and is a no-op where the partitioner already agrees.
+    constrain = lambda v, s: jax.lax.with_sharding_constraint(
+        v, jax.sharding.NamedSharding(mesh, s)
+    )
+    return fn(
+        constrain(x, x_spec),
+        constrain(params["router"], router_spec),
+        constrain(params["wi"], wi_spec),
+        constrain(wg, wi_spec),
+        constrain(params["wo"], wo_spec),
+    )

@@ -34,3 +34,16 @@ def fused_expert_mlp_quant(xe, wi, wg, wo):
     """wi/wg/wo: int8 per-output-channel QuantizedArrays — tiles dequantized
     in VMEM right before each MXU dot (kernels/expert_mlp_quant.py)."""
     return expert_mlp_quant(xe, wi, wg, wo, interpret=_interpret())
+
+
+def fused_decode_attention_quant(q, kq, ks, vq, vs, kpos, qpos, *, scale, causal, window, softcap):
+    """Decode attention over an int8 KV cache — K/V tiles dequantized in
+    VMEM right before the attention dots (kernels/attention_quant.py).
+    Compiles natively on TPU; interpret mode elsewhere."""
+    from repro.kernels.attention_quant import decode_attention_quant
+
+    return decode_attention_quant(
+        q, kq, ks, vq, vs, kpos, qpos,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        interpret=_interpret(),
+    )

@@ -51,6 +51,39 @@ _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _OPERANDS_RE = re.compile(r"\(([^)]*)\)")
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an HLO operand list at top level.  Modern ``as_text()`` prints
+    operands with inline shapes — ``f32[64,64]{1,0} %Arg_0.1, f32[...] %b`` —
+    so a naive ``split(",")`` breaks inside the shape brackets / layout
+    braces; track bracket depth instead."""
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return [p for p in parts if p]
+
+
+def _operand_shape(op_text: str, shapes: Dict[str, str]) -> str:
+    """Shape string for one operand: the inline ``dtype[dims]`` prefix when
+    present (current XLA text format), else a lookup of the bare ``%name``
+    in the computation's instruction table (older format)."""
+    if _SHAPE_RE.search(op_text):
+        return op_text
+    name = op_text.split()[-1].lstrip("%") if op_text.split() else ""
+    return shapes.get(name, "")
+
+
 def _shape_bytes(shape_str: str) -> int:
     total = 0
     for t, dims in _SHAPE_RE.findall(shape_str):
@@ -188,8 +221,8 @@ def parse_computations(hlo: str, score_dims: set = frozenset()) -> Dict[str, Com
             contract = 1
             cm = _CONTRACT_RE.search(line)
             if ops_m and cm:
-                lhs_name = ops_m.group(1).split(",")[0].strip().lstrip("%")
-                lhs_shape = shapes.get(lhs_name, "")
+                operands = _split_operands(ops_m.group(1))
+                lhs_shape = _operand_shape(operands[0], shapes) if operands else ""
                 _, lhs_dims = _first_shape_dims(lhs_shape)
                 for d in cm.group(1).split(","):
                     if d.strip() and int(d) < len(lhs_dims):
@@ -221,10 +254,10 @@ def parse_computations(hlo: str, score_dims: set = frozenset()) -> Dict[str, Com
                 nbytes = 0
                 ops_m = _OPERANDS_RE.search(line[line.index("=") :])
                 if ops_m:
-                    for oname in ops_m.group(1).split(","):
-                        oname = oname.strip().lstrip("%")
-                        if oname in shapes and not _is_score_shape(shapes[oname], score_dims):
-                            nbytes += _shape_bytes(shapes[oname])
+                    for otext in _split_operands(ops_m.group(1)):
+                        sh = _operand_shape(otext, shapes)
+                        if sh and not _is_score_shape(sh, score_dims):
+                            nbytes += _shape_bytes(sh)
                 cur.traffic += nbytes
             elif _is_score_shape(shape_str, score_dims):
                 pass  # VMEM-resident inside the flash attention kernel

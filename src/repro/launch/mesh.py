@@ -3,18 +3,18 @@ never touches jax device state.  Single pod: (data=16, model=16) = 256 chips
 of TPU v5e; multi-pod adds a leading 'pod' axis (2 pods = 512 chips)."""
 from __future__ import annotations
 
-import jax
+from repro.parallel.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(4, 2), axes=("data", "model")):
     """Small mesh for subprocess multi-device tests (8 host devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 # TPU v5e hardware constants (roofline):

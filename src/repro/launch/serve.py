@@ -38,6 +38,10 @@ def main() -> None:
     ap.add_argument("--quant-group-size", type=int, default=0,
                     help="scale group size along the contraction dim, int8 or int4 "
                          "(0 = one scale per output channel)")
+    ap.add_argument("--kv-bits", type=int, default=0, choices=[0, 8],
+                    help="KV-cache quantization: 8 = int8 cache with per-head, "
+                         "per-timestep scales (~4x fewer decode cache bytes), "
+                         "0 = full precision; composes with --quant-bits")
     args = ap.parse_args()
     if args.temperature <= 0.0 and (args.top_k or args.top_p):
         ap.error("--top-k/--top-p have no effect at --temperature 0 (greedy); "
@@ -99,8 +103,24 @@ def main() -> None:
         temperature=args.temperature,
         top_k=args.top_k,
         top_p=args.top_p,
+        kv_cache_bits=args.kv_bits,
     )
     eng = Engine(cfg, params, ec)
+    if args.kv_bits:
+        from repro.models.model import init_caches
+        from repro.quant import kv_cache_bytes
+
+        # abstract shapes only — sizing the banner must not allocate caches
+        sizes = {
+            bits: kv_cache_bytes(jax.eval_shape(
+                lambda b=bits: init_caches(cfg, args.batch, eng._capacity,
+                                           cross_len=eng._cross_len, kv_bits=b)
+            ))
+            for bits in (0, args.kv_bits)
+        }
+        fp_b, q_b = sizes[0], sizes[args.kv_bits]
+        print(f"KV cache int{args.kv_bits}: {fp_b/1e6:.2f}MB -> {q_b/1e6:.2f}MB "
+              f"({fp_b/q_b:.2f}x fewer decode cache bytes)")
 
     rng = np.random.default_rng(0)
     reqs = [

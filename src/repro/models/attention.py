@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.configs.base import AttnSpec, ModelConfig
 from repro.models.modules import apply_rope, dense_init, init_rmsnorm, rmsnorm, softcap
 from repro.parallel.sharding import shard_hint
+from repro.quant.kv import QuantizedKV, kv_quantize_values, materialize_kv
 from repro.quant.qarrays import materialize
 
 NEG_INF = -1e30
@@ -60,15 +61,37 @@ def init_attention(key, cfg: ModelConfig, spec: AttnSpec, dtype) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int, dtype) -> dict:
+def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int, dtype, *, kv_bits: int = 0) -> dict:
     """Ring-buffer KV cache.  ``pos`` holds the absolute position stored in
     each slot (-1 = empty), which doubles as the validity/window mask source.
-    A full-context cache is simply capacity == max_seq_len."""
-    return {
-        "k": jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
-        "v": jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
-        "pos": jnp.full((batch, capacity), -1, jnp.int32),
-    }
+    A full-context cache is simply capacity == max_seq_len.
+
+    ``kv_bits=8`` stores K/V as :class:`~repro.quant.kv.QuantizedKV` (int8
+    values + f32 per-(timestep, head) scales, quantize-on-write): ~4x fewer
+    cache bytes streamed per decode step, the §5 memory-bound lever after
+    MoQ expert weights.  0 = full precision."""
+    shape = (batch, capacity, n_kv, head_dim)
+    if kv_bits == 8:
+        k = QuantizedKV.zeros(shape, dtype)
+        v = QuantizedKV.zeros(shape, dtype)
+    elif kv_bits == 0:
+        k = jnp.zeros(shape, dtype)
+        v = jnp.zeros(shape, dtype)
+    else:
+        raise ValueError(f"kv_bits must be 0 (fp) or 8 (int8), got {kv_bits}")
+    return {"k": k, "v": v, "pos": jnp.full((batch, capacity), -1, jnp.int32)}
+
+
+def _write_kv(old, new_vals, write_fn):
+    """Apply ``write_fn(buffer, values)`` to a cache tensor: directly for fp
+    caches, to the (q, scale) pair for QuantizedKV (quantize-on-write — each
+    token's scale is self-contained, so slot overwrites need no rescaling)."""
+    if isinstance(old, QuantizedKV):
+        q_new, s_new = kv_quantize_values(new_vals)
+        return QuantizedKV(
+            write_fn(old.q, q_new), write_fn(old.scale, s_new), old.orig_dtype
+        )
+    return write_fn(old, new_vals.astype(old.dtype))
 
 
 def _cache_write_decode(cache: dict, k_new, v_new, index) -> dict:
@@ -79,8 +102,9 @@ def _cache_write_decode(cache: dict, k_new, v_new, index) -> dict:
     B = cache["k"].shape[0]
     if jnp.ndim(index) == 0:
         slot = jnp.mod(index, cap)
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+        write = lambda buf, vals: jax.lax.dynamic_update_slice_in_dim(buf, vals, slot, axis=1)
+        k = _write_kv(cache["k"], k_new, write)
+        v = _write_kv(cache["v"], v_new, write)
         pos = jax.lax.dynamic_update_slice_in_dim(
             cache["pos"], jnp.broadcast_to(index, (B, 1)).astype(jnp.int32), slot, axis=1
         )
@@ -88,8 +112,9 @@ def _cache_write_decode(cache: dict, k_new, v_new, index) -> dict:
     # ragged: per-row batch-indexed scatter
     rows = jnp.arange(B)
     slot = jnp.mod(index.astype(jnp.int32), cap)  # [B]
-    k = cache["k"].at[rows, slot].set(k_new[:, 0])
-    v = cache["v"].at[rows, slot].set(v_new[:, 0])
+    write = lambda buf, vals: buf.at[rows, slot].set(vals[:, 0])
+    k = _write_kv(cache["k"], k_new, write)
+    v = _write_kv(cache["v"], v_new, write)
     pos = cache["pos"].at[rows, slot].set(index.astype(jnp.int32))
     return {"k": k, "v": v, "pos": pos}
 
@@ -101,8 +126,9 @@ def _cache_write_prefill(cache: dict, k, v, positions) -> dict:
     cap = cache["k"].shape[1]
     S = k.shape[1]
     if cap >= S:
-        k_ = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
-        v_ = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+        write = lambda buf, vals: jax.lax.dynamic_update_slice_in_dim(buf, vals, 0, axis=1)
+        k_ = _write_kv(cache["k"], k, write)
+        v_ = _write_kv(cache["v"], v, write)
         pos_ = jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions.astype(jnp.int32), 0, axis=1)
         return {"k": k_, "v": v_, "pos": pos_}
     # keep last `cap` tokens; place token p at slot p % cap
@@ -111,11 +137,56 @@ def _cache_write_prefill(cache: dict, k, v, positions) -> dict:
     p_tail = positions[:, S - cap :].astype(jnp.int32)
     slots = jnp.mod(p_tail[0], cap)  # same for every batch row
     order = jnp.argsort(slots)
+    reorder = lambda buf, vals: vals[:, order]  # rebuild, old buffer unused
     return {
-        "k": k_tail[:, order],
-        "v": v_tail[:, order],
+        "k": _write_kv(cache["k"], k_tail, reorder),
+        "v": _write_kv(cache["v"], v_tail, reorder),
         "pos": p_tail[:, order],
     }
+
+
+# Process-wide default for decode over a quantized KV cache: None = auto
+# (Pallas dequant-in-kernel on TPU, dequantize-into-_sdpa reference elsewhere
+# — interpret-mode Pallas is a correctness tool, far too slow to serve from).
+# "kernel" / "ref" force.  Mirrors core.moe.set_quant_expert_backend.
+KV_QUANT_BACKEND = [None]
+
+
+def set_kv_quant_backend(mode) -> None:
+    """Test/benchmark knob; read at trace time (not part of jit cache keys),
+    so switching drops all cached compilations."""
+    assert mode in (None, "kernel", "ref"), mode
+    if KV_QUANT_BACKEND[0] == mode:
+        return
+    KV_QUANT_BACKEND[0] = mode
+    jax.clear_caches()
+
+
+def _decode_attend_quant(q, cache: dict, row_pos, spec: AttnSpec, scale: float):
+    """One-token decode over a QuantizedKV cache.  q: [B, 1, H, dh]."""
+    mode = KV_QUANT_BACKEND[0]
+    if mode is None:
+        mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+    window = spec.window if spec.kind == "local" else 0
+    if mode == "kernel":
+        from repro.kernels.ops import fused_decode_attention_quant
+
+        B, S, H, dh = q.shape
+        Hkv = cache["k"].shape[2]
+        qg = q[:, 0].reshape(B, Hkv, H // Hkv, dh)
+        y = fused_decode_attention_quant(
+            qg,
+            cache["k"].q, cache["k"].scale, cache["v"].q, cache["v"].scale,
+            cache["pos"], row_pos[:, None],
+            scale=scale, causal=spec.causal, window=window,
+            softcap=spec.logit_softcap,
+        )
+        return y.reshape(B, 1, H, dh)
+    mask = _window_causal_mask(row_pos[:, None], cache["pos"], window, spec.causal)
+    return _sdpa(
+        q, materialize_kv(cache["k"]), materialize_kv(cache["v"]),
+        mask, scale, spec.logit_softcap,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -234,7 +305,7 @@ def attention(
 
     if spec.kind == "cross":
         if cache is not None and mode.startswith("decode"):
-            k, v = cache["k"], cache["v"]
+            k, v = materialize_kv(cache["k"]), materialize_kv(cache["v"])
             k_pos = cache["pos"]
         else:
             assert memory is not None
@@ -288,13 +359,18 @@ def attention(
         row_pos = jnp.broadcast_to(row_pos, (B,)).astype(jnp.int32)
         idx = row_pos if mode == "decode_ragged" else row_pos[0]
         new_cache = _cache_write_decode(cache, k, v, idx)
-        mask = _window_causal_mask(
-            row_pos[:, None],
-            new_cache["pos"],
-            spec.window if spec.kind == "local" else 0,
-            spec.causal,
-        )
-        y = _sdpa(q, new_cache["k"], new_cache["v"], mask, scale, spec.logit_softcap)
+        if isinstance(new_cache["k"], QuantizedKV):
+            # the just-written token is read back quantized too, so decode
+            # sees exactly what the Pallas kernel streams from HBM
+            y = _decode_attend_quant(q, new_cache, row_pos, spec, scale)
+        else:
+            mask = _window_causal_mask(
+                row_pos[:, None],
+                new_cache["pos"],
+                spec.window if spec.kind == "local" else 0,
+                spec.causal,
+            )
+            y = _sdpa(q, new_cache["k"], new_cache["v"], mask, scale, spec.logit_softcap)
     else:
         pos2d = positions if positions.ndim == 2 else positions[None]
         pos2d = jnp.broadcast_to(pos2d, (B, S))

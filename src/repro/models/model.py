@@ -62,10 +62,12 @@ def init_params(cfg: ModelConfig, key) -> dict:
     return p
 
 
-def init_caches(cfg: ModelConfig, batch: int, capacity: int, *, cross_len: int = 0) -> dict:
+def init_caches(cfg: ModelConfig, batch: int, capacity: int, *, cross_len: int = 0, kv_bits: int = 0) -> dict:
+    """``kv_bits=8`` allocates int8 QuantizedKV self-attention caches
+    (quantize-on-write; see repro/quant/kv.py), 0 = full precision."""
     dt = _dtype(cfg.param_dtype)
     return {
-        f"seg{i}": init_segment_cache(cfg, seg, batch, capacity, dt, cross_len=cross_len)
+        f"seg{i}": init_segment_cache(cfg, seg, batch, capacity, dt, cross_len=cross_len, kv_bits=kv_bits)
         for i, seg in enumerate(cfg.segments)
     }
 
@@ -229,7 +231,7 @@ def prefill_into_slot(
     """Prefill one request and write its cache state into row ``slot`` of the
     pooled slot caches (continuous batching admission)."""
     x = embed_tokens(cfg, params, tokens)
-    one_caches = init_caches(cfg, 1, _pool_capacity(caches))
+    one_caches = init_caches(cfg, 1, _pool_capacity(caches), kv_bits=_pool_kv_bits(caches))
     x, filled, _ = _run_segments(cfg, params, x, positions, one_caches, "prefill", memory, False)
     logits = logits_out(cfg, params, x[:, -1:])[:, 0]
 
@@ -245,3 +247,12 @@ def _pool_capacity(caches: dict) -> int:
     seq dim across layers (window layers hold smaller rings)."""
     caps = [leaf.shape[2] for leaf in jax.tree.leaves(caches) if leaf.ndim == 5]
     return max(caps) if caps else 1
+
+
+def _pool_kv_bits(caches: dict) -> int:
+    """KV quantization of an existing cache pool (so per-request prefill
+    caches in continuous batching are allocated with a matching layout)."""
+    from repro.quant.kv import QuantizedKV
+
+    leaves = jax.tree.leaves(caches, is_leaf=lambda l: isinstance(l, QuantizedKV))
+    return 8 if any(isinstance(l, QuantizedKV) for l in leaves) else 0

@@ -53,14 +53,16 @@ def init_layer(key, cfg: ModelConfig, ls: LayerSpec, dtype) -> dict:
     return p
 
 
-def init_layer_cache(cfg: ModelConfig, ls: LayerSpec, batch: int, capacity: int, dtype, *, cross_len: int = 0):
+def init_layer_cache(cfg: ModelConfig, ls: LayerSpec, batch: int, capacity: int, dtype, *, cross_len: int = 0, kv_bits: int = 0):
     """Cache pytree for one layer.  ``capacity`` = full-context length for
-    global attention; local layers get a ring of size window."""
+    global attention; local layers get a ring of size window.  ``kv_bits=8``
+    stores self-attention K/V as int8 QuantizedKV (cross caches and SSM/LRU
+    states stay fp — they are tiny by comparison)."""
     c = {}
     m = ls.mixer
     if isinstance(m, AttnSpec):
         cap = min(m.window, capacity) if (m.kind == "local" and m.window > 0) else capacity
-        c["self"] = init_kv_cache(batch, cap, cfg.num_kv_heads, cfg.head_dim, dtype)
+        c["self"] = init_kv_cache(batch, cap, cfg.num_kv_heads, cfg.head_dim, dtype, kv_bits=kv_bits)
     elif isinstance(m, SSMSpec):
         c["self"] = init_ssm_cache(batch, m, dtype)
     elif isinstance(m, LRUSpec):
@@ -139,10 +141,10 @@ def init_segment(key, cfg: ModelConfig, seg: Segment, dtype) -> dict:
     return out
 
 
-def init_segment_cache(cfg: ModelConfig, seg: Segment, batch: int, capacity: int, dtype, *, cross_len: int = 0):
+def init_segment_cache(cfg: ModelConfig, seg: Segment, batch: int, capacity: int, dtype, *, cross_len: int = 0, kv_bits: int = 0):
     out = {}
     for j, ls in enumerate(seg.pattern):
-        one = init_layer_cache(cfg, ls, batch, capacity, dtype, cross_len=cross_len)
+        one = init_layer_cache(cfg, ls, batch, capacity, dtype, cross_len=cross_len, kv_bits=kv_bits)
         out[f"pos{j}"] = jax.tree.map(lambda a: jnp.broadcast_to(a, (seg.repeats,) + a.shape), one)
     return out
 

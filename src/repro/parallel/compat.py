@@ -1,0 +1,92 @@
+"""Version-compat shims over JAX APIs that moved/renamed across releases.
+
+The repo targets current JAX but must run on older installs (0.4.x):
+
+  * ``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)`` —
+    explicit axis types don't exist before 0.5; :func:`make_mesh` forwards
+    ``axis_types`` only when the installed ``jax.make_mesh`` accepts it
+    (every mesh in this repo uses Auto axes, which is the old default).
+  * ``jax.shard_map`` — top-level export (with ``check_vma=``) is new;
+    older installs have ``jax.experimental.shard_map.shard_map`` with the
+    same semantics under ``check_rep=``.
+
+Everything mesh/shard_map-shaped in the repo (and the subprocess scripts in
+``tests/test_dist.py``) goes through these two helpers so a JAX upgrade or
+downgrade is a no-op for callers.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Optional, Sequence
+
+import jax
+
+# Guarded: jax.make_mesh itself only appeared in 0.4.35 — importing this
+# module (e.g. for axis_size/shard_map alone) must not crash on installs
+# without it.
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    hasattr(jax, "make_mesh")
+    and "axis_types" in inspect.signature(jax.make_mesh).parameters
+)
+
+
+def default_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` when the installed JAX has explicit axis
+    types, else None (old JAX: every mesh axis is implicitly Auto)."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is None:
+        return None
+    return (at.Auto,) * n
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    axis_types: Optional[tuple] = None,
+    devices=None,
+):
+    """``jax.make_mesh`` that tolerates installs without ``axis_types``.
+
+    ``axis_types=None`` means "Auto for every axis" — passed explicitly on
+    new JAX, omitted on old JAX where Auto is the only behavior.
+    """
+    shapes = tuple(axis_shapes)
+    if not hasattr(jax, "make_mesh"):
+        import numpy as np
+
+        devs = devices if devices is not None else jax.devices()
+        n = int(np.prod(shapes))
+        return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shapes), tuple(axis_names))
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if _MAKE_MESH_TAKES_AXIS_TYPES:
+        if axis_types is None:
+            axis_types = default_axis_types(len(shapes))
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(shapes, tuple(axis_names), **kw)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` (new) / psum-of-ones (old) inside shard_map or
+    any other named-axis context."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    import numpy as np
+
+    return int(np.prod(jax.lax.psum(1, axis_name)))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new JAX; the ``jax.experimental`` one (with
+    ``check_vma`` mapped onto its older ``check_rep`` spelling) otherwise."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )

@@ -1,5 +1,6 @@
 """MoQ-style post-training quantization (DeepSpeed-MoE §4, "3.7x smaller";
-Kim et al. 2022): weight-only int8 / int4 expert compression for serving.
+Kim et al. 2022) plus serving-time KV-cache quantization (§5 memory-bound
+decode): weight-only int8 / int4 expert compression and an int8 KV cache.
 
 Public surface:
 
@@ -8,10 +9,15 @@ Public surface:
     manifest exactly like a plain array.
   * :func:`~repro.quant.ptq.quantize_params` — policy-driven PTQ over a
     params pytree (experts-only / experts+attention / all matmul weights).
-  * ``kernels/expert_mlp_quant.py`` — Pallas grouped expert MLP that
-    dequantizes int8 weight tiles in VMEM right before the MXU dot.
+  * :class:`~repro.quant.kv.QuantizedKV` — int8 KV-cache tensor with
+    per-(timestep, head) scales, quantized on write during prefill/decode
+    (``kv_cache_bits`` knob on QuantConfig / EngineConfig / serve.py).
+  * ``kernels/expert_mlp_quant.py`` / ``kernels/attention_quant.py`` —
+    Pallas kernels that dequantize int8 weight / K-V tiles in VMEM right
+    before their MXU dots.
 """
 from repro.quant.qarrays import QuantizedArray, materialize
+from repro.quant.kv import QuantizedKV, kv_cache_bytes, kv_quantize_values, materialize_kv
 from repro.quant.ptq import (
     dequantize_params,
     prepare_params_for_serving,
@@ -22,7 +28,11 @@ from repro.quant.ptq import (
 
 __all__ = [
     "QuantizedArray",
+    "QuantizedKV",
     "materialize",
+    "materialize_kv",
+    "kv_quantize_values",
+    "kv_cache_bytes",
     "quantize_params",
     "dequantize_params",
     "prepare_params_for_serving",

@@ -44,7 +44,7 @@ class ContinuousEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4, capacity: int = 256,
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
-                 eos_id: int = -1, seed: int = 0):
+                 eos_id: int = -1, seed: int = 0, kv_cache_bits: int = 0):
         self.cfg = cfg
         from repro.quant import prepare_params_for_serving
 
@@ -55,7 +55,10 @@ class ContinuousEngine:
         self.top_k = top_k
         self.top_p = top_p
         self.eos_id = eos_id
-        self.caches = init_caches(cfg, slots, capacity)
+        # kv_cache_bits=8: pooled slot caches live as int8 QuantizedKV —
+        # ~4x more slot-capacity per byte of cache memory; admission prefill
+        # and ragged decode quantize on write (models/attention.py)
+        self.caches = init_caches(cfg, slots, capacity, kv_bits=kv_cache_bits)
         self.slots = [SlotState() for _ in range(slots)]
         self.queue: List[tuple] = []
         self.done: Dict[int, Response] = {}

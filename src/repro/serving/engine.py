@@ -37,6 +37,7 @@ class EngineConfig:
     top_p: float = 0.0  # nucleus sampling mass; 0 = off
     eos_id: int = -1  # -1: never stop early
     pad_id: int = 0
+    kv_cache_bits: int = 0  # 0 = fp cache, 8 = int8 QuantizedKV (quant/kv.py)
 
 
 @dataclass
@@ -85,7 +86,10 @@ class Engine:
         self._cross_len = cross_len
 
     def _make_caches(self, batch: int):
-        return init_caches(self.cfg, batch, self._capacity, cross_len=self._cross_len)
+        return init_caches(
+            self.cfg, batch, self._capacity,
+            cross_len=self._cross_len, kv_bits=self.ec.kv_cache_bits,
+        )
 
     def generate(self, requests: Sequence[Request], *, seed: int = 0) -> List[Response]:
         ec = self.ec

@@ -11,6 +11,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.dist
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -29,7 +31,8 @@ def run_script(body: str, n_dev: int = 8) -> str:
 PREAMBLE = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.parallel.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 """
 
 
@@ -93,14 +96,15 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.parallel.collectives import (flat_all_to_all, flat_all_to_all_back,
     hierarchical_all_to_all, hierarchical_all_to_all_back)
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.parallel.compat import make_mesh, shard_map
+mesh = make_mesh((2, 4), ("pod", "data"))
 E, C, D = 16, 4, 8
 xg = jax.random.normal(jax.random.PRNGKey(0), (8, E, C, D))
 def run(fn):
     def body(xs):
         return fn(xs.reshape(E, C, D))[None]
-    return jax.shard_map(body, mesh=mesh, in_specs=P(("pod","data"), None, None, None),
-                         out_specs=P(("pod","data"), None, None, None))(xg)
+    return shard_map(body, mesh=mesh, in_specs=P(("pod","data"), None, None, None),
+                     out_specs=P(("pod","data"), None, None, None))(xg)
 flat = run(lambda x: flat_all_to_all(x, ("pod","data")))
 hier = run(lambda x: hierarchical_all_to_all(x, "data", "pod"))
 np.testing.assert_allclose(np.asarray(flat), np.asarray(hier), atol=0)
@@ -134,7 +138,10 @@ with use_mesh(mesh):
     params_s = jax.tree.map(shard, params, pspecs)
     opt_s = init_adamw(params_s)
     toks_s = jax.device_put(toks, NamedSharding(mesh, batch_pspec(mesh, 2)))
-    p2, o2, m2 = jax.jit(step)(params_s, opt_s, toks_s, toks_s)
+    # fresh wrapper: jax caches traces per function object, and the first
+    # jax.jit(step) traced WITHOUT the mesh (dense-dispatch fallback baked
+    # in); the mesh run must retrace so moe_impl='ep' sees the active mesh
+    p2, o2, m2 = jax.jit(lambda *a: step(*a))(params_s, opt_s, toks_s, toks_s)
 assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4, (float(m1["loss"]), float(m2["loss"]))
 jax.tree.map(lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4),
              p1, p2)
@@ -201,7 +208,8 @@ class TestContextParallelAttention:
         run_script("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.parallel.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 from repro.configs.base import AttnSpec, ModelConfig
 from repro.models.attention import attention, init_attention
 from repro.parallel.sharding import use_mesh
@@ -236,7 +244,8 @@ from repro.parallel.sharding import use_mesh, RULESETS
 
 cfg = ModelConfig(name="t", family="moe", source="x", d_model=64, num_heads=4, num_kv_heads=2,
                   head_dim=16, vocab_size=100, segments=(), param_dtype="float32", compute_dtype="float32")
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*3)
+from repro.parallel.compat import make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 spec = FFNSpec(kind="moe", d_ff=128, num_experts=8, top_k=2, capacity_factor=8.0)
 p = init_moe(jax.random.PRNGKey(0), cfg, spec, jnp.float32)
 x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 64))
