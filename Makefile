@@ -1,10 +1,13 @@
-.PHONY: test test-quant test-dist bench-quant bench-kv
+.PHONY: test test-quant test-paged test-dist bench-quant bench-kv bench-paged
 
 test:
 	sh scripts/ci.sh
 
 test-quant:
 	PYTHONPATH=src python -m pytest -q tests/test_quant.py tests/test_kv_quant.py
+
+test-paged:
+	PYTHONPATH=src python -m pytest -q tests/test_paged.py
 
 test-dist:
 	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -15,3 +18,6 @@ bench-quant:
 
 bench-kv:
 	PYTHONPATH=src python -m benchmarks.run kv_quant
+
+bench-paged:
+	PYTHONPATH=src python -m benchmarks.run paged

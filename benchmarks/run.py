@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   kv_quant — int8 KV cache: cache bytes/token fp vs quantized, decode-step
              wall-clock with fp vs int8 caches (CPU ref path), batch-size
              headroom at a fixed cache-memory budget
+  paged    — paged KV block pool: cache bytes + effective sequences/GiB vs
+             contiguous slots (fp and int8 pages), decode-tick wall-clock,
+             and a traffic-mix run with per-tick scheduler metrics (JSON)
 
 Run: PYTHONPATH=src python -m benchmarks.run [section ...]
 """
@@ -268,6 +271,92 @@ def kv_quant() -> None:
          f"{red:.2f}x_fewer_cache_bytes,batch_headroom_at_fixed_budget={red:.2f}x")
 
 
+def paged() -> None:
+    """Paged KV block pool (serving/kv_pool.py): (a) cache bytes for the same
+    live traffic, contiguous slots x capacity vs a pool provisioned for the
+    actual sequence lengths; (b) effective concurrent sequences per GiB of
+    cache — the number that multiplies with int8 KV; (c) measured decode-tick
+    wall-clock paged vs contiguous through the ContinuousEngine (CPU ref
+    path; TPU uses the scalar-prefetch Pallas page-gather kernel); (d) a
+    short traffic mix with per-tick scheduler metrics emitted as JSON."""
+    import json
+
+    from repro.core.prmoe import nlg_moe
+    from repro.models.model import init_caches, init_paged_caches, init_params
+    from repro.quant import kv_cache_bytes
+    from repro.serving.continuous import ContinuousEngine
+    from repro.serving.engine import Request
+
+    cfg = nlg_moe("paged-bench", 4, 256, 4, 16, vocab=1024).replace(
+        param_dtype="float32", compute_dtype="float32")
+    slots, capacity, ps = 8, 256, 16
+    avg_len = 48  # demo traffic: 32-token prompts + 16 new tokens
+    pages_per_seq = -(-avg_len // ps)
+
+    for kv_bits in (0, 8):
+        tag = f"int{kv_bits}" if kv_bits else "fp32"
+        contig = kv_cache_bytes(jax.eval_shape(
+            lambda b=kv_bits: init_caches(cfg, slots, capacity, kv_bits=b)))
+        n_pages = slots * pages_per_seq  # provisioned for the traffic, not worst case
+        pool = kv_cache_bytes(jax.eval_shape(
+            lambda b=kv_bits: init_paged_caches(
+                cfg, slots, capacity, n_pages=n_pages, page_size=ps, kv_bits=b)))
+        emit(f"paged_cache_bytes_{tag}", 0.0,
+             f"contiguous={contig},pool={pool}({n_pages}x{ps}pages),"
+             f"reduction={contig/pool:.2f}x")
+        # effective concurrent sequences per GiB: contiguous reserves
+        # `capacity` cache tokens per sequence; paged reserves only the pages
+        # a sequence actually occupies
+        per_tok_contig = contig / (slots * capacity)
+        # denominator = ALLOCATABLE tokens only — the trash page's bytes are
+        # pure overhead and stay in the numerator
+        per_tok_paged = pool / (n_pages * ps)
+        seqs_contig = 2**30 / (capacity * per_tok_contig)
+        seqs_paged = 2**30 / (pages_per_seq * ps * per_tok_paged)
+        emit(f"paged_effective_seqs_per_GiB_{tag}", 0.0,
+             f"contiguous={seqs_contig:.0f},paged={seqs_paged:.0f},"
+             f"gain={seqs_paged/seqs_contig:.2f}x(target:>=2x)")
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    t_slots, t_cap = 4, 128
+    rng = jax.random.PRNGKey(1)
+    prompts = [jax.random.randint(jax.random.fold_in(rng, i), (32,), 0,
+                                  cfg.vocab_size).tolist() for i in range(t_slots)]
+    rows = {}
+    for mode in ("contiguous", "paged"):
+        eng = ContinuousEngine(
+            cfg, params, slots=t_slots, capacity=t_cap,
+            paged=(mode == "paged"), page_size=ps,
+        )
+        for p in prompts:
+            eng.submit(Request(prompt=p, max_new_tokens=t_cap - 33))
+        eng.step()  # compile
+        us = time_fn(eng.step, iters=10, warmup=2)
+        rows[mode] = us
+        emit(f"paged_decode_tick_{mode}", us, f"slots={t_slots},cap={t_cap}")
+    emit("paged_decode_tick_overhead", 0.0,
+         f"{rows['paged']/rows['contiguous']:.2f}x_vs_contiguous(CPU_ref_gather)")
+
+    # traffic mix: many short + a few long, pool at half the contiguous
+    # reservation — per-tick scheduler telemetry straight from step()
+    eng = ContinuousEngine(cfg, params, slots=6, capacity=128, paged=True,
+                           page_size=ps, n_pages=6 * 4)
+    for i in range(10):
+        n = 12 if i % 3 else 48
+        eng.submit(Request(prompt=prompts[i % t_slots][: 8 + (i % 3) * 8],
+                           max_new_tokens=n))
+    eng.run_until_done()
+    occ = [m["page_occupancy"] for m in eng.metrics_log]
+    emit("paged_scheduler_traffic_mix", 0.0,
+         f"ticks={len(eng.metrics_log)},peak_occupancy={max(occ):.2f},"
+         f"preemptions={eng.preemptions}")
+    print("# paged_metrics_json:", json.dumps({
+        "config": {"slots": 6, "capacity": 128, "page_size": ps, "n_pages": 24},
+        "preemptions": eng.preemptions,
+        "ticks": eng.metrics_log,
+    }))
+
+
 SECTIONS = {
     "table3": table3,
     "fig10": fig10,
@@ -279,6 +368,7 @@ SECTIONS = {
     "moe_impl": moe_impl,
     "quant": quant,
     "kv_quant": kv_quant,
+    "paged": paged,
 }
 
 

@@ -10,6 +10,11 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 python -m pytest -q tests/test_quant.py tests/test_kv_quant.py
+
+# paged serving stage: block-pool allocator, page-gather kernel vs ref,
+# paged-vs-contiguous greedy parity, preemption/fragmentation scheduling
+python -m pytest -q tests/test_paged.py
+
 python -m pytest -x -q --ignore=tests/test_dist.py
 
 # dist tier (jax-compat shim in parallel/compat.py + the dense-dispatch

@@ -123,6 +123,32 @@ class QuantConfig:
 
 
 @dataclass(frozen=True)
+class PagedKVConfig:
+    """Paged KV-cache serving (§5 memory economics; see ``serving/kv_pool.py``).
+
+    Instead of reserving a contiguous ``capacity``-token cache row per slot,
+    cache memory is a shared pool of fixed-size pages and each sequence owns
+    only the pages its tokens occupy, through a static-shape block table.
+    Effective concurrent sequences per cache byte then scale with the *actual*
+    average sequence length rather than the worst case, and compose with
+    ``kv_cache_bits=8`` (int8 pages).
+
+    page_size: cache tokens per page.  Smaller pages pack tighter (≤
+               ``page_size - 1`` tokens wasted per sequence) but mean more
+               gather steps per decode; 16-128 is the practical range.
+    n_pages:   total pages in the pool.  0 = auto-size to
+               ``slots * ceil(capacity / page_size)`` (no oversubscription —
+               same worst-case bytes as contiguous).  Provisioning fewer
+               pages than the worst case is the point: admission goes by
+               free-block count and the scheduler preempts the youngest slot
+               if traffic outruns the pool.
+    """
+
+    page_size: int = 16
+    n_pages: int = 0
+
+
+@dataclass(frozen=True)
 class LayerSpec:
     mixer: object  # AttnSpec | SSMSpec | LRUSpec
     ffn: FFNSpec

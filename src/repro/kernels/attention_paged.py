@@ -1,0 +1,194 @@
+"""Paged decode attention (TPU Pallas, validated in interpret mode): one
+query token attends over K/V *pages* gathered through a block table.
+
+The KV cache lives in HBM as a shared page pool ``[n_pages+1, page_size,
+H_kv, dh]`` (last page = trash, never mapped); each sequence's history is the
+pages named by its block-table row.  The grid is (batch, kv-head, table
+entry) with the table **scalar-prefetched** so the BlockSpec index map can
+pick each K/V page data-dependently — the DMA engine streams exactly the
+pages a sequence owns, nothing else, and the kernel never materializes a
+gathered contiguous copy of the cache.  The page axis is innermost
+(sequential on TPU), so the online-softmax running max / normalizer /
+accumulator live in VMEM scratch across pages, flash-attention style.
+
+Composes with the int8 KV cache (kernels/attention_quant.py): when the pool
+is quantized, each page's int8 K/V tile is widened and rescaled by its
+per-(timestep, head) f32 scales *in VMEM* right before the dot — pages then
+cost ~1 byte/entry of HBM traffic on top of the fragmentation win.
+
+Masking (unmapped-page validity, causality, sliding window) is computed
+in-kernel from the pool's absolute-position array: the trash page is pinned
+at ``pos == -1`` so -1 table entries (pre-clamped to the trash page by the
+wrapper) contribute nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _soft_cap(s, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(s / cap) * cap
+    return s
+
+
+def _paged_kernel(table_ref, *refs, scale, causal, window, softcap, nt, ps, quantized):
+    """Grid (B, Hkv, nt); refs layout depends on ``quantized`` (scales
+    present or not).  Scratch: running max / normalizer / accumulator."""
+    if quantized:
+        (q_ref, qpos_ref, kq_ref, ks_ref, vq_ref, vs_ref, kpos_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, qpos_ref, kq_ref, vq_ref, kpos_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    G, dh = q_ref.shape[-2], q_ref.shape[-1]
+    q = q_ref[...].reshape(G, dh).astype(jnp.float32)
+    k = kq_ref[...].reshape(ps, dh).astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[...].reshape(ps, 1)  # dequantize the page in VMEM
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [G, ps]
+    s = _soft_cap(s, softcap)
+
+    kp = kpos_ref[...].reshape(1, ps)  # absolute positions, -1 = empty
+    qp = qpos_ref[0, 0]
+    valid = kp >= 0
+    if causal:
+        valid = valid & (kp <= qp)
+    if window > 0:
+        valid = valid & (qp - kp < window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])  # [G, ps]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    v = vq_ref[...].reshape(ps, dh).astype(jnp.float32)
+    if quantized:
+        v = v * vs_ref[...].reshape(ps, 1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(it == nt - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "softcap", "interpret"),
+)
+def paged_decode_attention(
+    q: jax.Array,      # [B, Hkv, G, dh] — one decode token, grouped per kv-head
+    kq: jax.Array,     # [Pt, ps, Hkv, dh] page pool (int8 if quantized, else fp)
+    ks,                # [Pt, ps, Hkv, 1] f32 scales, or None (fp pool)
+    vq: jax.Array,     # [Pt, ps, Hkv, dh]
+    vs,                # [Pt, ps, Hkv, 1] or None
+    kpos: jax.Array,   # [Pt, ps] int32 — absolute position per pool entry, -1 empty
+    table: jax.Array,  # [B, nt] int32 — page ids; MUST be pre-clamped: -1 -> Pt-1
+    qpos: jax.Array,   # [B, 1] int32 — the query token's absolute position
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns [B, Hkv, G, dh] attention output in q.dtype."""
+    B, Hkv, G, dh = q.shape
+    ps = kq.shape[1]
+    nt = table.shape[1]
+    quantized = ks is not None
+
+    kern = functools.partial(
+        _paged_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        nt=nt, ps=ps, quantized=quantized,
+    )
+    # index maps get the prefetched table ref appended; each (b, ·, t) step
+    # DMAs page table[b, t] of the pool straight into VMEM
+    page = lambda b, h, t, tref: (tref[b, t], 0, h, 0)
+    in_specs = [
+        pl.BlockSpec((1, 1, G, dh), lambda b, h, t, tref: (b, h, 0, 0)),   # q
+        pl.BlockSpec((1, 1), lambda b, h, t, tref: (b, 0)),                # qpos
+        pl.BlockSpec((1, ps, 1, dh), page),                                # k page
+    ]
+    args = [q, qpos, kq]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, ps, 1, 1), page))                 # k scales
+        args.append(ks)
+    in_specs.append(pl.BlockSpec((1, ps, 1, dh), page))                    # v page
+    args.append(vq)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, ps, 1, 1), page))                 # v scales
+        args.append(vs)
+    in_specs.append(pl.BlockSpec((1, ps), lambda b, h, t, tref: (tref[b, t], 0)))  # pos
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nt),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, h, t, tref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),      # running max
+            pltpu.VMEM((G,), jnp.float32),      # running normalizer
+            pltpu.VMEM((G, dh), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, dh), q.dtype),
+        interpret=interpret,
+    )(table, *args, kpos)
+
+
+def paged_decode_attention_ref(
+    q, kq, ks, vq, vs, kpos, table, qpos, *, scale, causal=True, window=0, softcap=0.0
+):
+    """Pure-jnp oracle: gather the mapped pages into a contiguous [B, T]
+    view (T = nt * ps), dequantize if needed, masked f32 softmax."""
+    B, Hkv, G, dh = q.shape
+    ps = kq.shape[1]
+
+    def gather(pool):  # [Pt, ps, ...] -> [B, nt*ps, ...]
+        g = pool[table]  # table pre-clamped: -1 -> trash page
+        return g.reshape((B, table.shape[1] * ps) + g.shape[3:])
+
+    k = gather(kq).astype(jnp.float32)
+    v = gather(vq).astype(jnp.float32)
+    if ks is not None:
+        k = k * gather(ks)
+        v = v * gather(vs)
+    s = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32), k) * scale
+    s = _soft_cap(s, softcap)
+    kp = gather(kpos)[:, None, None, :]  # [B, 1, 1, T]
+    qp = qpos[:, :, None, None].astype(jnp.int32)
+    valid = kp >= 0
+    if causal:
+        valid = valid & (kp <= qp)
+    if window > 0:
+        valid = valid & (qp - kp < window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v)
+    return out.astype(q.dtype)

@@ -1,8 +1,14 @@
 """Serving launcher: loads (or randomly initialises) a model and runs the
-batched DS-MoE inference engine over synthetic requests, reporting prefill
-and per-token decode latency.
+DS-MoE inference engine over synthetic requests, reporting prefill and
+per-token decode latency.
 
   PYTHONPATH=src python -m repro.launch.serve --arch nlg-350m-moe128 --reduced
+
+``--paged`` switches to the continuous-batching engine with a paged KV block
+pool (serving/kv_pool.py): cache memory becomes a shared pool of
+``--page-size``-token pages, requests are admitted by free-block count, and
+``--pages`` oversubscribes the pool below the contiguous worst case.
+Composes with ``--kv-bits 8`` (int8 pages) and ``--quant-bits``.
 """
 from __future__ import annotations
 
@@ -42,6 +48,17 @@ def main() -> None:
                     help="KV-cache quantization: 8 = int8 cache with per-head, "
                          "per-timestep scales (~4x fewer decode cache bytes), "
                          "0 = full precision; composes with --quant-bits")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve via the continuous-batching engine with a "
+                         "paged KV block pool (admission by free-block count, "
+                         "lazy table growth, youngest-slot preemption)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="cache tokens per page for --paged")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="total pool pages for --paged (0 = auto: "
+                         "slots * ceil(capacity / page_size), no oversubscription)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots for --paged (default: --batch)")
     args = ap.parse_args()
     if args.temperature <= 0.0 and (args.top_k or args.top_p):
         ap.error("--top-k/--top-p have no effect at --temperature 0 (greedy); "
@@ -104,9 +121,11 @@ def main() -> None:
         top_k=args.top_k,
         top_p=args.top_p,
         kv_cache_bits=args.kv_bits,
+        page_size=args.page_size if args.paged else 0,
+        n_pages=args.pages,
     )
-    eng = Engine(cfg, params, ec)
-    if args.kv_bits:
+    eng = None if args.paged else Engine(cfg, params, ec)
+    if args.kv_bits and eng is not None:
         from repro.models.model import init_caches
         from repro.quant import kv_cache_bytes
 
@@ -128,6 +147,52 @@ def main() -> None:
                 max_new_tokens=args.new_tokens)
         for _ in range(args.requests)
     ]
+
+    if args.paged:
+        from repro.configs.base import PagedKVConfig
+        from repro.models.model import init_caches, init_paged_caches
+        from repro.quant import kv_cache_bytes
+        from repro.serving.continuous import ContinuousEngine
+
+        # the page knobs ride on EngineConfig (built above) and are handed to
+        # the continuous engine as a PagedKVConfig bundle
+        pcfg = PagedKVConfig(page_size=ec.page_size, n_pages=ec.n_pages)
+        slots = args.slots or args.batch
+        capacity = args.prompt_len + args.new_tokens
+        ceng = ContinuousEngine(
+            cfg, params, slots=slots, capacity=capacity,
+            temperature=ec.temperature, top_k=ec.top_k, top_p=ec.top_p,
+            kv_cache_bits=ec.kv_cache_bits, paged_cfg=pcfg,
+        )
+        contig_b = kv_cache_bytes(jax.eval_shape(
+            lambda: init_caches(cfg, slots, capacity, kv_bits=args.kv_bits)))
+        paged_b = kv_cache_bytes(jax.eval_shape(
+            lambda: init_paged_caches(cfg, slots, capacity, n_pages=ceng.n_pages,
+                                      page_size=ceng.page_size, kv_bits=args.kv_bits)))
+        print(f"paged pool: {ceng.n_pages} pages x {ceng.page_size} tokens "
+              f"({paged_b/1e6:.2f}MB) vs contiguous {slots} x {capacity} "
+              f"({contig_b/1e6:.2f}MB)")
+        # warmup (compile prefill + decode; the request completes, so the
+        # pool and metrics window start clean apart from the tick counter)
+        ceng.submit(Request(prompt=reqs[0].prompt, max_new_tokens=2))
+        ceng.run_until_done()
+        ceng.done.clear()
+        ceng.preemptions = 0
+        ceng.metrics_log.clear()
+        t0 = time.time()
+        ids = [ceng.submit(r) for r in reqs]
+        done = ceng.run_until_done()
+        dt = time.time() - t0
+        n_tok = sum(len(done[i].tokens) for i in ids)
+        m = ceng.last_metrics
+        print(f"served {len(ids)} requests, {n_tok} tokens in {dt:.2f}s "
+              f"({n_tok/dt:.1f} tok/s, arch={cfg.name}, paged, "
+              f"preemptions={ceng.preemptions}, peak_occupancy="
+              f"{max((r.get('page_occupancy', 0.0) for r in ceng.metrics_log), default=0.0):.2f})")
+        print("last tick metrics:", m)
+        print("sample:", done[ids[0]].tokens[:10])
+        return
+
     # warmup (compile)
     eng.generate(reqs[: args.batch])
     t0 = time.time()

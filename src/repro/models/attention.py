@@ -82,6 +82,42 @@ def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int, dtype, *,
     return {"k": k, "v": v, "pos": jnp.full((batch, capacity), -1, jnp.int32)}
 
 
+def spec_is_paged(spec: AttnSpec) -> bool:
+    """Whether a self-attention layer's cache goes into the shared page pool
+    under paged serving.  Sliding-window layers keep per-slot rings — a ring
+    of ``window`` tokens is already fixed-size and fragmentation-free, and
+    paging it would buy nothing; paging targets the unbounded global-context
+    caches whose worst-case reservation is what strands memory."""
+    return not (spec.kind == "local" and spec.window > 0)
+
+
+def init_paged_kv_cache(n_pages: int, page_size: int, n_kv: int, head_dim: int, dtype, *, kv_bits: int = 0) -> dict:
+    """Shared page-pool KV cache: ``[n_pages + 1, page_size, n_kv, head_dim]``
+    with NO batch axis — sequences own pages through per-slot block tables
+    (serving/kv_pool.py) instead of reserving a contiguous capacity row.
+
+    The extra last page is the *trash* page: never handed out by the
+    allocator, its ``pos`` stays -1 forever.  Unmapped (-1) block-table
+    entries are clamped to it on read (contributing nothing, masked by
+    ``pos == -1``) and inactive-slot decode writes are routed into it, which
+    is what lets the jitted decode step keep fully static shapes with no
+    per-row masking of the pool.
+
+    ``kv_bits=8`` stores pages as int8 :class:`~repro.quant.kv.QuantizedKV`
+    — the two serving memory levers compose: ~4x fewer bytes per cache
+    token × fragmentation-free packing of those tokens."""
+    shape = (n_pages + 1, page_size, n_kv, head_dim)
+    if kv_bits == 8:
+        k = QuantizedKV.zeros(shape, dtype)
+        v = QuantizedKV.zeros(shape, dtype)
+    elif kv_bits == 0:
+        k = jnp.zeros(shape, dtype)
+        v = jnp.zeros(shape, dtype)
+    else:
+        raise ValueError(f"kv_bits must be 0 (fp) or 8 (int8), got {kv_bits}")
+    return {"k": k, "v": v, "pos": jnp.full((n_pages + 1, page_size), -1, jnp.int32)}
+
+
 def _write_kv(old, new_vals, write_fn):
     """Apply ``write_fn(buffer, values)`` to a cache tensor: directly for fp
     caches, to the (q, scale) pair for QuantizedKV (quantize-on-write — each
@@ -189,6 +225,94 @@ def _decode_attend_quant(q, cache: dict, row_pos, spec: AttnSpec, scale: float):
     )
 
 
+# Process-wide default for decode over a *paged* KV pool: None = auto
+# (Pallas block-table gather kernel on TPU, gather-into-_sdpa reference
+# elsewhere).  "kernel" / "ref" force.  Mirrors set_kv_quant_backend.
+PAGED_BACKEND = [None]
+
+
+def set_paged_backend(mode) -> None:
+    """Test/benchmark knob; read at trace time (not part of jit cache keys),
+    so switching drops all cached compilations."""
+    assert mode in (None, "kernel", "ref"), mode
+    if PAGED_BACKEND[0] == mode:
+        return
+    PAGED_BACKEND[0] = mode
+    jax.clear_caches()
+
+
+def _paged_clamp_table(table: jax.Array, n_pages_total: int) -> jax.Array:
+    """-1 (unmapped) entries -> the trash page, whose pos is pinned at -1."""
+    return jnp.where(table < 0, n_pages_total - 1, table).astype(jnp.int32)
+
+
+def _paged_cache_write_decode(cache: dict, k_new, v_new, row_pos, table) -> dict:
+    """Write one token per row into its block-table page.  Rows whose table
+    entry for ``row_pos // page_size`` is unmapped (inactive slots, whose
+    table rows the scheduler resets to -1) land in the trash page with a -1
+    position — self-masking, so no post-hoc merge of the pool is needed."""
+    Pt, ps = cache["pos"].shape
+    B = row_pos.shape[0]
+    rows = jnp.arange(B)
+    entry = row_pos.astype(jnp.int32) // ps
+    offs = row_pos.astype(jnp.int32) % ps
+    pages = _paged_clamp_table(table[rows, entry], Pt)
+    write = lambda buf, vals: buf.at[pages, offs].set(vals[:, 0])
+    k = _write_kv(cache["k"], k_new, write)
+    v = _write_kv(cache["v"], v_new, write)
+    pos_val = jnp.where(pages == Pt - 1, -1, row_pos.astype(jnp.int32))
+    pos = cache["pos"].at[pages, offs].set(pos_val)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def _paged_gather(pool, table):
+    """[Pt, ps, ...] pool + [B, nt] clamped table -> [B, nt*ps, ...]."""
+    g = pool[table]
+    return g.reshape((table.shape[0], table.shape[1] * pool.shape[1]) + g.shape[3:])
+
+
+def _paged_decode_attend(q, cache: dict, row_pos, table, spec: AttnSpec, scale: float):
+    """One-token decode over a paged pool.  q: [B, 1, H, dh]."""
+    mode = PAGED_BACKEND[0]
+    if mode is None:
+        mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+    window = spec.window if spec.kind == "local" else 0
+    Pt = cache["pos"].shape[0]
+    tbl = _paged_clamp_table(table, Pt)
+    quant = isinstance(cache["k"], QuantizedKV)
+    if mode == "kernel":
+        from repro.kernels.ops import fused_decode_attention_paged
+
+        B, S, H, dh = q.shape
+        Hkv = cache["k"].shape[2]
+        qg = q[:, 0].reshape(B, Hkv, H // Hkv, dh)
+        if quant:
+            args = (cache["k"].q, cache["k"].scale, cache["v"].q, cache["v"].scale)
+        else:
+            args = (cache["k"], None, cache["v"], None)
+        y = fused_decode_attention_paged(
+            qg, *args, cache["pos"], tbl, row_pos[:, None],
+            scale=scale, causal=spec.causal, window=window,
+            softcap=spec.logit_softcap,
+        )
+        return y.reshape(B, 1, H, dh)
+    if quant:
+        k = materialize_kv(QuantizedKV(
+            _paged_gather(cache["k"].q, tbl), _paged_gather(cache["k"].scale, tbl),
+            cache["k"].orig_dtype,
+        ))
+        v = materialize_kv(QuantizedKV(
+            _paged_gather(cache["v"].q, tbl), _paged_gather(cache["v"].scale, tbl),
+            cache["v"].orig_dtype,
+        ))
+    else:
+        k = _paged_gather(cache["k"], tbl)
+        v = _paged_gather(cache["v"], tbl)
+    k_pos = _paged_gather(cache["pos"], tbl)
+    mask = _window_causal_mask(row_pos[:, None], k_pos, window, spec.causal)
+    return _sdpa(q, k, v, mask, scale, spec.logit_softcap)
+
+
 # ---------------------------------------------------------------------------
 # Core scaled-dot-product with GQA + masking
 # ---------------------------------------------------------------------------
@@ -285,12 +409,16 @@ def attention(
     memory_positions: Optional[jax.Array] = None,
     cache: Optional[dict] = None,
     mode: str = "train",
+    block_table: Optional[jax.Array] = None,
 ):
     """Returns (y, new_cache).  mode: train | prefill | decode.
 
     - train:   full self-attention over x (no cache IO).
     - prefill: same as train but also fills and returns the cache.
     - decode:  x is [B, 1, d]; reads cache, writes the new token into it.
+    - decode_paged: like decode_ragged, but global-context caches are shared
+      page pools addressed through ``block_table`` [B, max_pages] (window
+      layers keep their per-slot rings; see ``spec_is_paged``).
     - cross (spec.kind == 'cross'): attends to ``memory`` (no cache mutation
       for train; serving caches projected memory K/V once at prefill).
     """
@@ -357,20 +485,25 @@ def attention(
         # "decode_ragged" supports per-row positions (continuous batching).
         row_pos = positions[:, 0] if positions.ndim == 2 else positions
         row_pos = jnp.broadcast_to(row_pos, (B,)).astype(jnp.int32)
-        idx = row_pos if mode == "decode_ragged" else row_pos[0]
-        new_cache = _cache_write_decode(cache, k, v, idx)
-        if isinstance(new_cache["k"], QuantizedKV):
-            # the just-written token is read back quantized too, so decode
-            # sees exactly what the Pallas kernel streams from HBM
-            y = _decode_attend_quant(q, new_cache, row_pos, spec, scale)
+        if mode == "decode_paged" and spec_is_paged(spec):
+            assert block_table is not None, "decode_paged needs a block table"
+            new_cache = _paged_cache_write_decode(cache, k, v, row_pos, block_table)
+            y = _paged_decode_attend(q, new_cache, row_pos, block_table, spec, scale)
         else:
-            mask = _window_causal_mask(
-                row_pos[:, None],
-                new_cache["pos"],
-                spec.window if spec.kind == "local" else 0,
-                spec.causal,
-            )
-            y = _sdpa(q, new_cache["k"], new_cache["v"], mask, scale, spec.logit_softcap)
+            idx = row_pos if mode in ("decode_ragged", "decode_paged") else row_pos[0]
+            new_cache = _cache_write_decode(cache, k, v, idx)
+            if isinstance(new_cache["k"], QuantizedKV):
+                # the just-written token is read back quantized too, so decode
+                # sees exactly what the Pallas kernel streams from HBM
+                y = _decode_attend_quant(q, new_cache, row_pos, spec, scale)
+            else:
+                mask = _window_causal_mask(
+                    row_pos[:, None],
+                    new_cache["pos"],
+                    spec.window if spec.kind == "local" else 0,
+                    spec.causal,
+                )
+                y = _sdpa(q, new_cache["k"], new_cache["v"], mask, scale, spec.logit_softcap)
     else:
         pos2d = positions if positions.ndim == 2 else positions[None]
         pos2d = jnp.broadcast_to(pos2d, (B, S))

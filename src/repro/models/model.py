@@ -20,10 +20,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import AttnSpec, ModelConfig
+from repro.models.attention import spec_is_paged
 from repro.models.modules import dense_init, embed_init, init_rmsnorm, rmsnorm
 from repro.models.transformer import apply_segment, init_segment, init_segment_cache
 from repro.parallel.sharding import shard_hint
+from repro.quant.kv import QuantizedKV
 from repro.quant.qarrays import materialize
 
 
@@ -72,6 +74,27 @@ def init_caches(cfg: ModelConfig, batch: int, capacity: int, *, cross_len: int =
     }
 
 
+def init_paged_caches(
+    cfg: ModelConfig, slots: int, capacity: int, *, n_pages: int, page_size: int,
+    cross_len: int = 0, kv_bits: int = 0,
+) -> dict:
+    """Paged serving caches: global-context self-attention K/V live in shared
+    page pools ``[n_pages + 1, page_size, H_kv, dh]`` addressed through
+    per-slot block tables, instead of reserving ``capacity`` tokens per slot
+    (serving/kv_pool.py).  Window rings, cross caches, and SSM/LRU states
+    stay per-slot (``slots`` batch rows) — they are fixed-size already.
+    ``capacity`` remains the per-sequence context bound (it sizes the block
+    tables: ``ceil(capacity / page_size)`` entries per slot)."""
+    dt = _dtype(cfg.param_dtype)
+    return {
+        f"seg{i}": init_segment_cache(
+            cfg, seg, slots, capacity, dt, cross_len=cross_len, kv_bits=kv_bits,
+            pages=(n_pages, page_size),
+        )
+        for i, seg in enumerate(cfg.segments)
+    }
+
+
 # ---------------------------------------------------------------------------
 # Embedding / logits
 # ---------------------------------------------------------------------------
@@ -114,14 +137,14 @@ def encode(cfg: ModelConfig, params: dict, source: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _run_segments(cfg, params, x, positions, caches, mode, memory, remat):
+def _run_segments(cfg, params, x, positions, caches, mode, memory, remat, block_table=None):
     aux = jnp.zeros((), jnp.float32)
     new_caches = {}
     for i, seg in enumerate(cfg.segments):
         c = caches.get(f"seg{i}") if caches is not None else None
         x, c_new, a = apply_segment(
             cfg, seg, params["segments"][f"seg{i}"], x, positions,
-            caches=c, mode=mode, memory=memory, remat=remat,
+            caches=c, mode=mode, memory=memory, remat=remat, block_table=block_table,
         )
         aux = aux + a
         if caches is not None:
@@ -239,6 +262,152 @@ def prefill_into_slot(
         return jax.lax.dynamic_update_slice_in_dim(pool, one.astype(pool.dtype), slot, axis=1)
 
     merged = jax.tree.map(_write, caches, filled)
+    return logits, merged
+
+
+# ---------------------------------------------------------------------------
+# Paged serving entry points (shared page pool + per-slot block tables)
+# ---------------------------------------------------------------------------
+
+
+def _layer_entries(cfg: ModelConfig):
+    """Yield (seg_key, pos_key, LayerSpec, paged_self) over the decoder."""
+    for i, seg in enumerate(cfg.segments):
+        for j, ls in enumerate(seg.pattern):
+            paged = isinstance(ls.mixer, AttnSpec) and spec_is_paged(ls.mixer)
+            yield f"seg{i}", f"pos{j}", ls, paged
+
+
+def paged_ragged_decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    token: jax.Array,  # [B, 1] int32
+    positions: jax.Array,  # [B] int32 — PER-ROW absolute position
+    active: jax.Array,  # [B] bool — rows with live requests
+    caches: dict,  # from init_paged_caches
+    block_table: jax.Array,  # [B, max_pages] int32, -1 = unmapped
+    *,
+    memory: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """Continuous-batching decode tick over paged caches.  Pool writes are
+    self-masking (inactive slots' table rows are all -1, so their writes land
+    in the trash page); the per-slot leaves (window rings, SSM/LRU states,
+    cross caches) get the same masked merge as ``ragged_decode_step``."""
+    x = embed_tokens(cfg, params, token)
+    pos2d = positions.astype(jnp.int32)[:, None]
+    x, new_caches, _ = _run_segments(
+        cfg, params, x, pos2d, caches, "decode_paged", memory, False,
+        block_table=block_table,
+    )
+    logits = logits_out(cfg, params, x)[:, 0]
+
+    def _merge(new, old):
+        # per-slot leaves: [layers, B, ...] — select on the batch axis
+        mask = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+        return jnp.where(mask, new, old)
+
+    merged = {}
+    for sk, pk, ls, paged in _layer_entries(cfg):
+        c_new, c_old = new_caches[sk][pk], caches[sk][pk]
+        out = {}
+        for key in c_new:
+            if key == "self" and paged:
+                out[key] = c_new[key]  # pool — already masked via trash routing
+            else:
+                out[key] = jax.tree.map(_merge, c_new[key], c_old[key])
+        merged.setdefault(sk, {})[pk] = out
+    return logits, merged
+
+
+def paged_reset_pages(cfg: ModelConfig, caches: dict, page_mask: jax.Array) -> dict:
+    """Invalidate pages returned to the pool: ``page_mask`` [n_pages + 1]
+    bool -> those pages' ``pos`` entries become -1 in every layer's pool.
+
+    Required for correctness, not hygiene: page reuse only overwrites the
+    entries the new sequence actually fills, so without this a recycled
+    page's leftover positions (which can be <= the new sequence's query
+    position) would unmask the previous occupant's K/V."""
+    out = {}
+    for sk, pk, ls, paged in _layer_entries(cfg):
+        c = dict(caches[sk][pk])
+        if paged:
+            self_c = dict(c["self"])
+            # pos: [repeats, n_pages + 1, page_size]
+            self_c["pos"] = jnp.where(page_mask[None, :, None], -1, self_c["pos"])
+            c["self"] = self_c
+        out.setdefault(sk, {})[pk] = c
+    return out
+
+
+def paged_prefill_into_slot(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # [1, S] int32 — a single request's prompt
+    positions: jax.Array,  # [1, S] int32
+    slot: jax.Array,  # [] int32 — batch row for the per-slot leaves
+    caches: dict,  # from init_paged_caches
+    table_row: jax.Array,  # [max_pages] int32 — the slot's block table, -1 unmapped
+    *,
+    capacity: int,
+    kv_bits: int = 0,
+    memory: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """Admission prefill for paged serving: run the ordinary contiguous
+    prefill into a temporary single-sequence cache (identical numerics to the
+    non-paged path), then scatter the filled K/V into the slot's block-table
+    pages and dynamic-update the per-slot leaves at ``slot``.  The scheduler
+    must have mapped ``ceil(S / page_size)`` pages into ``table_row``."""
+    S = tokens.shape[1]
+    assert S <= capacity, f"prompt {S} exceeds per-sequence capacity {capacity}"
+    x = embed_tokens(cfg, params, tokens)
+    one_caches = init_caches(cfg, 1, capacity, kv_bits=kv_bits)
+    x, filled, _ = _run_segments(cfg, params, x, positions, one_caches, "prefill", memory, False)
+    logits = logits_out(cfg, params, x[:, -1:])[:, 0]
+    pos_vec = positions[0].astype(jnp.int32)  # [S]
+
+    def _write_slot(pool, one):
+        return jax.lax.dynamic_update_slice_in_dim(pool, one.astype(pool.dtype), slot, axis=1)
+
+    def _scatter_self(pool, tmp):
+        # pool: {"k","v","pos"} with leading repeats axis, pool tensors
+        # [R, Pt, ps, ...]; tmp: contiguous [R, 1, capacity, ...] with the
+        # prompt written at 0..S-1
+        Pt, ps = pool["pos"].shape[1], pool["pos"].shape[2]
+        pages = table_row[pos_vec // ps]
+        pages = jnp.where(pages < 0, Pt - 1, pages).astype(jnp.int32)
+        offs = pos_vec % ps
+
+        def scat(buf, vals):
+            return buf.at[:, pages, offs].set(vals)
+
+        def scat_kv(old, tmp_kv):
+            if isinstance(old, QuantizedKV):
+                # tmp was quantized on write during prefill — copy (q, scale)
+                # pairs verbatim, no requantization
+                return QuantizedKV(
+                    scat(old.q, tmp_kv.q[:, 0, :S]),
+                    scat(old.scale, tmp_kv.scale[:, 0, :S]),
+                    old.orig_dtype,
+                )
+            return scat(old, tmp_kv[:, 0, :S].astype(old.dtype))
+
+        pos_val = jnp.where(pages == Pt - 1, -1, pos_vec)
+        return {
+            "k": scat_kv(pool["k"], tmp["k"]),
+            "v": scat_kv(pool["v"], tmp["v"]),
+            "pos": scat(pool["pos"], jnp.broadcast_to(pos_val, (pool["pos"].shape[0], S))),
+        }
+
+    merged = {}
+    for sk, pk, ls, paged in _layer_entries(cfg):
+        c_pool, c_tmp = caches[sk][pk], filled[sk][pk]
+        out = {}
+        for key in c_pool:
+            if key == "self" and paged:
+                out[key] = _scatter_self(c_pool[key], c_tmp[key])
+            else:
+                out[key] = jax.tree.map(_write_slot, c_pool[key], c_tmp[key])
+        merged.setdefault(sk, {})[pk] = out
     return logits, merged
 
 

@@ -17,7 +17,13 @@ import jax.numpy as jnp
 
 from repro.configs.base import AttnSpec, FFNSpec, LayerSpec, LRUSpec, ModelConfig, Segment, SSMSpec
 from repro.core.moe import init_moe, moe_layer
-from repro.models.attention import attention, init_attention, init_kv_cache
+from repro.models.attention import (
+    attention,
+    init_attention,
+    init_kv_cache,
+    init_paged_kv_cache,
+    spec_is_paged,
+)
 from repro.models.modules import init_mlp, init_rmsnorm, mlp, rmsnorm
 from repro.models.rglru import init_lru, init_lru_cache, lru_layer
 from repro.models.ssm import init_ssm, init_ssm_cache, ssm_layer
@@ -53,16 +59,26 @@ def init_layer(key, cfg: ModelConfig, ls: LayerSpec, dtype) -> dict:
     return p
 
 
-def init_layer_cache(cfg: ModelConfig, ls: LayerSpec, batch: int, capacity: int, dtype, *, cross_len: int = 0, kv_bits: int = 0):
+def init_layer_cache(cfg: ModelConfig, ls: LayerSpec, batch: int, capacity: int, dtype, *, cross_len: int = 0, kv_bits: int = 0, pages=None):
     """Cache pytree for one layer.  ``capacity`` = full-context length for
     global attention; local layers get a ring of size window.  ``kv_bits=8``
     stores self-attention K/V as int8 QuantizedKV (cross caches and SSM/LRU
-    states stay fp — they are tiny by comparison)."""
+    states stay fp — they are tiny by comparison).
+
+    ``pages = (n_pages, page_size)`` switches global-context self caches to a
+    shared page pool addressed through block tables (paged serving); window
+    rings, cross caches, and SSM/LRU states stay per-slot."""
     c = {}
     m = ls.mixer
     if isinstance(m, AttnSpec):
-        cap = min(m.window, capacity) if (m.kind == "local" and m.window > 0) else capacity
-        c["self"] = init_kv_cache(batch, cap, cfg.num_kv_heads, cfg.head_dim, dtype, kv_bits=kv_bits)
+        if pages is not None and spec_is_paged(m):
+            n_pages, page_size = pages
+            c["self"] = init_paged_kv_cache(
+                n_pages, page_size, cfg.num_kv_heads, cfg.head_dim, dtype, kv_bits=kv_bits
+            )
+        else:
+            cap = min(m.window, capacity) if (m.kind == "local" and m.window > 0) else capacity
+            c["self"] = init_kv_cache(batch, cap, cfg.num_kv_heads, cfg.head_dim, dtype, kv_bits=kv_bits)
     elif isinstance(m, SSMSpec):
         c["self"] = init_ssm_cache(batch, m, dtype)
     elif isinstance(m, LRUSpec):
@@ -82,6 +98,7 @@ def apply_layer(
     cache: Optional[dict] = None,
     mode: str = "train",
     memory: Optional[jax.Array] = None,
+    block_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -89,7 +106,10 @@ def apply_layer(
     sc = cache.get("self") if cache is not None else None
     m = ls.mixer
     if isinstance(m, AttnSpec):
-        y, new_self = attention(cfg, m, params["attn"], h, positions, cache=sc, mode=mode)
+        y, new_self = attention(
+            cfg, m, params["attn"], h, positions, cache=sc, mode=mode,
+            block_table=block_table,
+        )
     elif isinstance(m, SSMSpec):
         y, new_self = ssm_layer(cfg, m, params["ssm"], h, cache=sc, mode=mode)
     elif isinstance(m, LRUSpec):
@@ -141,10 +161,10 @@ def init_segment(key, cfg: ModelConfig, seg: Segment, dtype) -> dict:
     return out
 
 
-def init_segment_cache(cfg: ModelConfig, seg: Segment, batch: int, capacity: int, dtype, *, cross_len: int = 0, kv_bits: int = 0):
+def init_segment_cache(cfg: ModelConfig, seg: Segment, batch: int, capacity: int, dtype, *, cross_len: int = 0, kv_bits: int = 0, pages=None):
     out = {}
     for j, ls in enumerate(seg.pattern):
-        one = init_layer_cache(cfg, ls, batch, capacity, dtype, cross_len=cross_len, kv_bits=kv_bits)
+        one = init_layer_cache(cfg, ls, batch, capacity, dtype, cross_len=cross_len, kv_bits=kv_bits, pages=pages)
         out[f"pos{j}"] = jax.tree.map(lambda a: jnp.broadcast_to(a, (seg.repeats,) + a.shape), one)
     return out
 
@@ -160,9 +180,13 @@ def apply_segment(
     mode: str = "train",
     memory: Optional[jax.Array] = None,
     remat: bool = False,
+    block_table: Optional[jax.Array] = None,
 ):
     """Scan the segment.  caches (if given) mirror the params structure with a
-    leading ``repeats`` axis.  Returns (x, new_caches, aux_sum)."""
+    leading ``repeats`` axis.  Returns (x, new_caches, aux_sum).
+
+    ``block_table`` (paged decode) is layer-invariant: every layer's page
+    pool shares one table, so it rides into the scan body as a capture."""
     has_cache = caches is not None
 
     def body(carry, xs):
@@ -172,7 +196,8 @@ def apply_segment(
             pkey = f"pos{j}"
             c = xs[1][pkey] if has_cache else None
             x, c_new, a = apply_layer(
-                cfg, ls, xs[0][pkey], x, positions, cache=c, mode=mode, memory=memory
+                cfg, ls, xs[0][pkey], x, positions, cache=c, mode=mode, memory=memory,
+                block_table=block_table,
             )
             if has_cache:
                 new_caches[pkey] = c_new

@@ -22,6 +22,13 @@ Layout (one cache tensor, e.g. K):
   * ``q``      int8  [..., T, H_kv, dh]   — symmetric values, zero-point 0
   * ``scale``  f32   [..., T, H_kv, 1]    — amax/127 per (timestep, head)
 
+The leading dims are layout-agnostic: contiguous slot caches carry
+``[..., B, T, ...]`` and the paged serving path lays the same pair out *per
+page* as ``[..., n_pages + 1, page_size, ...]`` (models/attention.py
+``init_paged_kv_cache``) — per-token scales mean pages quantize, scatter,
+recycle, and gather through block tables with no rescaling anywhere, and
+the dequant-in-VMEM kernels stream 1-byte entries either way.
+
 An all-zero slot quantizes to (q=0, scale≈0) and dequantizes to exact zeros,
 so freshly-initialized / vacated ring slots behave like the fp cache's zero
 fill (masked out by ``pos == -1`` anyway).

@@ -5,24 +5,49 @@ cannot wait for a whole batch to finish before admitting new requests.  This
 scheduler maintains a fixed pool of decode *slots*; each slot has its own
 sequence position, requests are admitted into free slots with a per-slot
 prefill, and every engine tick decodes all active slots in one batched
-``ragged_decode_step`` (per-row positions/ring-slots, masked sampling).
+ragged decode step (per-row positions, masked sampling).
 
-Static shapes throughout: the slot pool is fixed, so the jitted decode step
-never recompiles as traffic arrives/leaves — the property that makes
-continuous batching viable under XLA.
+Two KV-storage models share the scheduler:
+
+  * **contiguous** (default) — each slot owns a ``capacity``-token cache
+    row.  Admission = a free slot.  Simple, but memory is reserved for the
+    worst case: a 12-token request strands ``capacity - 12`` tokens.
+  * **paged** (``paged=True``) — cache memory is a shared pool of
+    ``page_size``-token pages (serving/kv_pool.py); each slot holds a
+    static-shape block table.  Admission goes by *free-block count*, a
+    sequence's table grows lazily as it decodes, pages return to the pool
+    the moment a request finishes, and when the pool is exhausted the
+    youngest slot is preempted back to the queue (its pages freed, its
+    progress resumed later via re-prefill over prompt + generated tokens).
+    Effective concurrent sequences per byte now scale with actual sequence
+    lengths, not the worst case — and multiply with ``kv_cache_bits=8``.
+
+Static shapes throughout: slot pool, page pool, and block tables are all
+fixed, so the jitted decode step never recompiles as traffic arrives/leaves
+— the property that makes continuous batching viable under XLA.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.models.model import init_caches, ragged_decode_step
+from repro.configs.base import ModelConfig, PagedKVConfig
+from repro.models.model import (
+    init_caches,
+    init_paged_caches,
+    paged_prefill_into_slot,
+    paged_ragged_decode_step,
+    paged_reset_pages,
+    prefill_into_slot,
+    ragged_decode_step,
+)
 from repro.serving.engine import Request, Response
+from repro.serving.kv_pool import BlockTables, KVBlockPool
 from repro.serving.sampling import sample
 
 
@@ -33,18 +58,51 @@ class SlotState:
     generated: List[int] = field(default_factory=list)
     budget: int = 0
     active: bool = False
+    admit_seq: int = -1  # admission order — youngest-first preemption key
+    prompt_len: int = 0  # original (untruncated) prompt length
+    # The request's base prompt, EXCLUDING generated tokens.  Preemption
+    # re-queues (prompt, generated) separately; re-admission rebuilds the
+    # context as (prompt + generated)[-keep:].  Storing the admitted context
+    # here instead would duplicate the generated prefix on a second
+    # preemption of the same request.
+    prompt: List[int] = field(default_factory=list)
+
+
+@dataclass
+class _Pending:
+    """Queue entry.  ``generated`` is non-empty for preempted requests: on
+    re-admission the engine prefills over ``prompt + generated`` so greedy
+    decoding resumes exactly where it left off."""
+
+    rid: int
+    prompt: List[int]
+    budget: int  # total response budget (already clamped to capacity - 1)
+    generated: List[int]
+    prompt_len: int
 
 
 class ContinuousEngine:
     """Slot-pool continuous batching.  ``step()`` = one decode tick; requests
-    are admitted on submit() whenever a slot is free.
+    are admitted on submit() whenever a slot (and, in paged mode, enough free
+    pages) is available.
 
     Like ``Engine``, accepts MoQ-quantized params (``QuantizedArray`` leaves
     from ``repro.quant.quantize_params``) transparently."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4, capacity: int = 256,
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
-                 eos_id: int = -1, seed: int = 0, kv_cache_bits: int = 0):
+                 eos_id: int = -1, seed: int = 0, kv_cache_bits: int = 0,
+                 paged: bool = False, page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 paged_cfg: Optional[PagedKVConfig] = None):
+        if paged_cfg is not None:
+            # bundled form of the same knobs (configs.base.PagedKVConfig);
+            # mixing it with the loose kwargs would silently shadow them
+            if paged or page_size is not None or n_pages is not None:
+                raise ValueError("pass either paged_cfg or paged/page_size/n_pages, not both")
+            paged = True
+            page_size = paged_cfg.page_size
+            n_pages = paged_cfg.n_pages
         self.cfg = cfg
         from repro.quant import prepare_params_for_serving
 
@@ -55,58 +113,148 @@ class ContinuousEngine:
         self.top_k = top_k
         self.top_p = top_p
         self.eos_id = eos_id
-        # kv_cache_bits=8: pooled slot caches live as int8 QuantizedKV —
-        # ~4x more slot-capacity per byte of cache memory; admission prefill
-        # and ragged decode quantize on write (models/attention.py)
-        self.caches = init_caches(cfg, slots, capacity, kv_bits=kv_cache_bits)
+        self.kv_cache_bits = kv_cache_bits
+        self.paged = paged
+        if paged:
+            self.page_size = page_size = int(page_size or 16)
+            self.max_pages = -(-capacity // page_size)  # table entries per slot
+            # n_pages None/0 = auto: slots * pages-per-capacity, i.e. the
+            # contiguous worst case (same convention as EngineConfig/--pages)
+            self.n_pages = int(n_pages) if n_pages else slots * self.max_pages
+            if self.n_pages < self.max_pages:
+                raise ValueError(
+                    f"n_pages={self.n_pages} cannot hold even one full-capacity "
+                    f"sequence ({self.max_pages} pages of {page_size})"
+                )
+            self.pool = KVBlockPool(self.n_pages, page_size)
+            self.tables = BlockTables(slots, self.max_pages)
+            # kv_cache_bits=8 composes: int8 pages (~4x fewer bytes per cache
+            # token) x fragmentation-free packing of those tokens
+            self.caches = init_paged_caches(
+                cfg, slots, capacity, n_pages=self.n_pages, page_size=page_size,
+                kv_bits=kv_cache_bits,
+            )
+        else:
+            # kv_cache_bits=8: pooled slot caches live as int8 QuantizedKV —
+            # ~4x more slot-capacity per byte of cache memory; admission
+            # prefill and ragged decode quantize on write
+            self.caches = init_caches(cfg, slots, capacity, kv_bits=kv_cache_bits)
         self.slots = [SlotState() for _ in range(slots)]
-        self.queue: List[tuple] = []
+        self.queue: List[_Pending] = []
         self.done: Dict[int, Response] = {}
+        self.preemptions = 0
+        self.metrics_log: List[dict] = []
+        self._metrics_cap = 65_536  # keep a bounded telemetry window
+        self.last_metrics: dict = {}
+        self._tick = 0
         self._next_id = 0
+        self._admit_counter = 0
         self._key = jax.random.PRNGKey(seed)
         self._cur_token = np.zeros((slots,), np.int32)
 
-        def _step(params, tokens, positions, active, caches):
-            return ragged_decode_step(cfg, params, tokens, positions, active, caches)
+        if paged:
+            def _step(params, tokens, positions, active, caches, tables):
+                return paged_ragged_decode_step(
+                    cfg, params, tokens, positions, active, caches, tables
+                )
 
-        self._decode = jax.jit(_step, donate_argnums=(4,))
+            self._decode = jax.jit(_step, donate_argnums=(4,))
 
-        def _prefill_one(params, tokens, positions, slot, caches):
-            # single-request prefill written into the pooled caches at `slot`
-            from repro.models.model import prefill_into_slot
+            def _prefill_one(params, tokens, positions, slot, caches, table_row):
+                return paged_prefill_into_slot(
+                    cfg, params, tokens, positions, slot, caches, table_row,
+                    capacity=capacity, kv_bits=kv_cache_bits,
+                )
 
-            return prefill_into_slot(cfg, params, tokens, positions, slot, caches)
+            self._prefill = jax.jit(_prefill_one, donate_argnums=(4,))
+            self._reset_pages = jax.jit(
+                lambda caches, mask: paged_reset_pages(cfg, caches, mask),
+                donate_argnums=(0,),
+            )
+        else:
+            def _step(params, tokens, positions, active, caches):
+                return ragged_decode_step(cfg, params, tokens, positions, active, caches)
 
-        self._prefill = jax.jit(_prefill_one, donate_argnums=(4,))
+            self._decode = jax.jit(_step, donate_argnums=(4,))
+
+            def _prefill_one(params, tokens, positions, slot, caches):
+                # single-request prefill written into the pooled caches at `slot`
+                return prefill_into_slot(cfg, params, tokens, positions, slot, caches)
+
+            self._prefill = jax.jit(_prefill_one, donate_argnums=(4,))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> int:
         rid = self._next_id
         self._next_id += 1
-        self.queue.append((rid, req))
+        # Budget clamp: the response plus at least one context token must fit
+        # the per-sequence capacity (a budget >= capacity used to flip the
+        # prompt-truncation index positive and keep the WRONG end of the
+        # prompt — or nothing at all).
+        budget = max(1, min(req.max_new_tokens, self.capacity - 1))
+        self.queue.append(_Pending(
+            rid=rid, prompt=list(req.prompt), budget=budget,
+            generated=[], prompt_len=len(req.prompt),
+        ))
         self._admit()
         return rid
 
     def _admit(self) -> None:
-        for i, slot in enumerate(self.slots):
-            if slot.active or not self.queue:
-                continue
-            rid, req = self.queue.pop(0)
-            prompt = list(req.prompt)[-self.capacity + req.max_new_tokens :]
-            toks = jnp.asarray(np.asarray(prompt, np.int32)[None])
-            pos = jnp.arange(len(prompt), dtype=jnp.int32)[None]
-            logits, self.caches = self._prefill(
-                self.params, toks, pos, jnp.asarray(i, jnp.int32), self.caches
-            )
+        """FIFO admission: fill free slots from the queue head.  In paged
+        mode a request is only admitted when the pool has enough free pages
+        for its prompt (admission by free-block count); the queue head blocks
+        rather than being skipped, so long requests cannot starve."""
+        while self.queue:
+            free = [i for i, s in enumerate(self.slots) if not s.active]
+            if not free:
+                return
+            i = free[0]
+            item = self.queue[0]
+            remaining = item.budget - len(item.generated)
+            # keep the LAST (capacity - remaining) context tokens: the newest
+            # prompt suffix, leaving exactly `remaining` cache tokens to decode
+            keep = self.capacity - remaining
+            ctx = (item.prompt + item.generated)[-keep:]
+            if self.paged:
+                pages = self.pool.alloc(self.pool.pages_for(len(ctx)), owner=i)
+                if pages is None:
+                    return  # wait for frees / completions
+                self.tables.append(i, pages)
+            self.queue.pop(0)
+            toks = jnp.asarray(np.asarray(ctx, np.int32)[None])
+            pos = jnp.arange(len(ctx), dtype=jnp.int32)[None]
+            if self.paged:
+                logits, self.caches = self._prefill(
+                    self.params, toks, pos, jnp.asarray(i, jnp.int32), self.caches,
+                    jnp.asarray(self.tables.row(i)),
+                )
+            else:
+                logits, self.caches = self._prefill(
+                    self.params, toks, pos, jnp.asarray(i, jnp.int32), self.caches
+                )
             self._key, sub = jax.random.split(self._key)
             first = int(sample(logits, sub, temperature=self.temperature,
                                top_k=self.top_k, top_p=self.top_p)[0])
             self.slots[i] = SlotState(
-                request_id=rid, pos=len(prompt), generated=[first],
-                budget=req.max_new_tokens, active=True,
+                request_id=item.rid, pos=len(ctx), generated=item.generated + [first],
+                budget=item.budget, active=True, admit_seq=self._admit_counter,
+                prompt_len=item.prompt_len, prompt=item.prompt,
             )
+            self._admit_counter += 1
             self._cur_token[i] = first
             self._finish_if_done(i)
+
+    def _release_slot(self, i: int) -> None:
+        if self.paged:
+            pages = self.pool.release(i)
+            self.tables.reset(i)
+            if pages:
+                # invalidate the recycled pages' positions device-side, or a
+                # later owner would see the previous occupant's stale K/V
+                mask = np.zeros((self.n_pages + 1,), bool)
+                mask[pages] = True
+                self.caches = self._reset_pages(self.caches, jnp.asarray(mask))
+        self.slots[i] = SlotState()
 
     def _finish_if_done(self, i: int) -> None:
         slot = self.slots[i]
@@ -117,35 +265,109 @@ class ContinuousEngine:
             gen = slot.generated
             if hit_eos:
                 gen = gen[:-1]
-            self.done[slot.request_id] = Response(tokens=gen, prompt_len=slot.pos)
-            self.slots[i] = SlotState()
+            self.done[slot.request_id] = Response(tokens=gen, prompt_len=slot.prompt_len)
+            self._release_slot(i)
             self._admit()
+
+    def _preempt(self, i: int) -> None:
+        """Push slot ``i`` back to the queue head and free its pages.  The
+        request resumes later by re-prefilling prompt + generated-so-far, so
+        greedy decoding continues token-exact."""
+        slot = self.slots[i]
+        self.queue.insert(0, _Pending(
+            rid=slot.request_id, prompt=slot.prompt, budget=slot.budget,
+            generated=slot.generated, prompt_len=slot.prompt_len,
+        ))
+        self._release_slot(i)
+        self.preemptions += 1
+
+    def _ensure_pages(self) -> None:
+        """Lazy table growth: before a decode tick, every active slot needs a
+        page mapped for its write position.  Oldest slots grow first; when
+        the pool is dry the *youngest* active slot is preempted (LIFO — the
+        request with the least sunk prefill/decode work re-queues)."""
+        order = sorted(
+            (i for i, s in enumerate(self.slots) if s.active),
+            key=lambda i: self.slots[i].admit_seq,
+        )
+        for i in order:
+            slot = self.slots[i]
+            while slot.active and self.tables.n_mapped(i) <= slot.pos // self.page_size:
+                got = self.pool.alloc(1, owner=i)
+                if got is not None:
+                    self.tables.append(i, got)
+                    continue
+                victim = max(
+                    (j for j, s in enumerate(self.slots) if s.active),
+                    key=lambda j: self.slots[j].admit_seq,
+                )
+                self._preempt(victim)
+                if victim == i:
+                    break  # this slot itself re-queued; stop growing it
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One decode tick over all active slots.  Returns #active slots."""
+        """One decode tick over all active slots.  Returns #active slots.
+        Per-tick scheduler telemetry lands in ``last_metrics`` /
+        ``metrics_log`` (active slots, free pages, tok/s, preemptions)."""
+        t0 = time.perf_counter()
         active = np.asarray([s.active for s in self.slots])
         if not active.any():
             self._admit()
             active = np.asarray([s.active for s in self.slots])
             if not active.any():
                 return 0
+        if self.paged:
+            self._ensure_pages()
+            active = np.asarray([s.active for s in self.slots])
+            if not active.any():
+                return 0
         positions = np.asarray([s.pos if s.active else 0 for s in self.slots], np.int32)
         tokens = jnp.asarray(self._cur_token[:, None])
-        logits, self.caches = self._decode(
-            self.params, tokens, jnp.asarray(positions), jnp.asarray(active), self.caches
-        )
+        if self.paged:
+            logits, self.caches = self._decode(
+                self.params, tokens, jnp.asarray(positions), jnp.asarray(active),
+                self.caches, jnp.asarray(self.tables.table),
+            )
+        else:
+            logits, self.caches = self._decode(
+                self.params, tokens, jnp.asarray(positions), jnp.asarray(active), self.caches
+            )
         self._key, sub = jax.random.split(self._key)
         nxt = np.asarray(sample(logits, sub, temperature=self.temperature,
                                 top_k=self.top_k, top_p=self.top_p))
+        n_active = int(active.sum())
         for i, slot in enumerate(self.slots):
-            if not slot.active:
+            # Gate on the PRE-decode snapshot, not slot.active: a completion
+            # at row < i can trigger _admit into free row i mid-loop, and
+            # that fresh slot must not consume nxt[i] — its logits row was
+            # computed while the row was inactive.
+            if not active[i]:
                 continue
             slot.pos += 1
             slot.generated.append(int(nxt[i]))
             self._cur_token[i] = int(nxt[i])
             self._finish_if_done(i)
-        return int(active.sum())
+        self._record_metrics(n_active, time.perf_counter() - t0)
+        return n_active
+
+    def _record_metrics(self, n_active: int, dt: float) -> None:
+        self._tick += 1
+        m = {
+            "tick": self._tick,
+            "active_slots": n_active,
+            "queue_depth": len(self.queue),
+            "tokens_this_tick": n_active,
+            "tok_per_s": round(n_active / max(dt, 1e-9), 2),
+            "preemptions": self.preemptions,
+        }
+        if self.paged:
+            m["free_pages"] = self.pool.free_count
+            m["page_occupancy"] = round(self.pool.occupancy, 4)
+        self.last_metrics = m
+        self.metrics_log.append(m)
+        if len(self.metrics_log) > self._metrics_cap:
+            del self.metrics_log[: -self._metrics_cap]
 
     def run_until_done(self, max_ticks: int = 10_000) -> Dict[int, Response]:
         for _ in range(max_ticks):

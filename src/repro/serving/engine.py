@@ -38,6 +38,11 @@ class EngineConfig:
     eos_id: int = -1  # -1: never stop early
     pad_id: int = 0
     kv_cache_bits: int = 0  # 0 = fp cache, 8 = int8 QuantizedKV (quant/kv.py)
+    # Paged KV pool knobs, consumed by the continuous-serving path
+    # (serve.py --paged -> ContinuousEngine; see configs.base.PagedKVConfig).
+    # The static batched Engine always uses contiguous per-row caches.
+    page_size: int = 0  # >0 = serve with a paged block pool
+    n_pages: int = 0  # 0 = auto (slots * pages-per-capacity, no oversubscription)
 
 
 @dataclass
@@ -94,11 +99,16 @@ class Engine:
     def generate(self, requests: Sequence[Request], *, seed: int = 0) -> List[Response]:
         ec = self.ec
         out: List[Response] = []
-        for start in range(0, len(requests), ec.max_batch):
-            out.extend(self._generate_batch(requests[start : start + ec.max_batch], seed))
+        base = jax.random.PRNGKey(seed)
+        for chunk, start in enumerate(range(0, len(requests), ec.max_batch)):
+            # fold the chunk index into the key: chunk 2+ must not replay
+            # chunk 1's sampling noise (chunk 0 keeps the unfolded key so
+            # single-batch results are unchanged across versions)
+            key = base if chunk == 0 else jax.random.fold_in(base, chunk)
+            out.extend(self._generate_batch(requests[start : start + ec.max_batch], key))
         return out
 
-    def _generate_batch(self, reqs: Sequence[Request], seed: int) -> List[Response]:
+    def _generate_batch(self, reqs: Sequence[Request], key: jax.Array) -> List[Response]:
         ec, cfg = self.ec, self.cfg
         B = len(reqs)
         # Right-align prompts into a fixed buffer so the last prefill position
@@ -117,7 +127,6 @@ class Engine:
             self.cfg.frontend.n_tokens if (cfg.frontend is not None and cfg.family == "vlm") else 0
         )
 
-        key = jax.random.PRNGKey(seed)
         max_new = min(max(r.max_new_tokens for r in reqs), ec.max_decode)
         generated = np.zeros((B, max_new), np.int32)
         done = np.zeros((B,), bool)

@@ -1,0 +1,137 @@
+"""Paged KV-cache block pool: host-side page accounting for the serving stack.
+
+The contiguous slot model reserves ``capacity`` cache tokens per slot up
+front, so a 12-token request strands the other ``capacity - 12`` tokens of
+cache memory for its whole lifetime — the fragmentation problem that caps
+how many concurrent sequences a byte of HBM can serve (DeepSpeed-MoE §5
+treats aggregate memory bandwidth/capacity as *the* serving resource).  Here
+cache memory is instead a pool of fixed-size pages; each sequence owns only
+the pages its tokens actually occupy, via a static-shape per-slot block
+table.  Effective concurrent sequences per byte scale with 1/avg-seq-pages
+rather than 1/capacity, and the win multiplies with the int8 KV cache
+(quant/kv.py) since both shrink the same buffer.
+
+This module is pure host-side bookkeeping (numpy + freelist); the device
+arrays it indexes into live in the model caches (models/attention.py
+``init_paged_kv_cache``).  Two invariants the scheduler relies on:
+
+  * **all-or-nothing alloc** — ``alloc`` either returns exactly ``n`` pages
+    or None, so admission by free-block count never half-admits a request;
+  * **preemption-safe release** — every page records its owning slot, so
+    ``release(owner)`` frees everything a preempted/finished slot holds even
+    if the scheduler's own table row has already been reset, and double
+    frees raise instead of corrupting the freelist.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+class KVBlockPool:
+    """Fixed pool of ``n_pages`` pages of ``page_size`` cache tokens each.
+
+    Page ids are ``0 .. n_pages-1``.  (The device-side pool tensors carry one
+    extra *trash* page at index ``n_pages`` that is never handed out: writes
+    for inactive slots and reads through -1 table entries are routed there —
+    see models/attention.py.)
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages <= 0 or page_size <= 0:
+            raise ValueError(f"need n_pages > 0 and page_size > 0, got {n_pages}/{page_size}")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        # LIFO freelist: recently-freed pages are re-used first (their cache
+        # lines are the ones most likely still resident).
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._owner = np.full((n_pages,), -1, np.int64)  # -1 = free
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return self.used_count / self.n_pages
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache tokens."""
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    def owned_by(self, owner: int) -> List[int]:
+        return [int(p) for p in np.nonzero(self._owner == owner)[0]]
+
+    # -- alloc / free ------------------------------------------------------
+    def alloc(self, n: int, owner: int) -> Optional[List[int]]:
+        """Pop ``n`` pages for ``owner`` (a slot id >= 0), all-or-nothing.
+        Returns the page ids, or None if fewer than ``n`` are free."""
+        if owner < 0:
+            raise ValueError(f"owner must be >= 0, got {owner}")
+        if n < 0:
+            raise ValueError(f"cannot alloc {n} pages")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owner[pages] = owner
+        return pages
+
+    def free(self, pages) -> None:
+        """Return pages to the pool.  Freeing an already-free page raises —
+        a double free means two slots think they own the same page."""
+        for p in pages:
+            p = int(p)
+            if not (0 <= p < self.n_pages):
+                raise ValueError(f"page {p} out of range [0, {self.n_pages})")
+            if self._owner[p] < 0:
+                raise ValueError(f"double free of page {p}")
+            self._owner[p] = -1
+            self._free.append(p)
+
+    def release(self, owner: int) -> List[int]:
+        """Free every page owned by ``owner`` (request completion or
+        preemption) and return them.  Safe to call with a stale/unknown
+        owner (frees nothing)."""
+        pages = self.owned_by(owner)
+        if pages:
+            self.free(pages)
+        return pages
+
+
+class BlockTables:
+    """Static-shape per-slot block tables: an int32 ``[slots, max_pages]``
+    array, -1 for unmapped entries.  Fixed shape is what keeps the jitted
+    paged decode step from recompiling as sequences grow/shrink: the device
+    side always sees the same ``[slots, max_pages]`` operand, and -1 entries
+    read the trash page (masked by its ``pos == -1`` fill)."""
+
+    def __init__(self, slots: int, max_pages: int):
+        if slots <= 0 or max_pages <= 0:
+            raise ValueError(f"need slots > 0 and max_pages > 0, got {slots}/{max_pages}")
+        self.max_pages = int(max_pages)
+        self.table = np.full((slots, max_pages), -1, np.int32)
+
+    def n_mapped(self, slot: int) -> int:
+        return int((self.table[slot] >= 0).sum())
+
+    def append(self, slot: int, pages) -> None:
+        """Map ``pages`` into the next unmapped entries of ``slot``'s row."""
+        start = self.n_mapped(slot)
+        pages = list(pages)
+        if start + len(pages) > self.max_pages:
+            raise ValueError(
+                f"slot {slot} table overflow: {start}+{len(pages)} > {self.max_pages}"
+            )
+        self.table[slot, start : start + len(pages)] = np.asarray(pages, np.int32)
+
+    def reset(self, slot: int) -> None:
+        self.table[slot] = -1
+
+    def row(self, slot: int) -> np.ndarray:
+        return self.table[slot]
