@@ -1,4 +1,4 @@
-.PHONY: test test-quant test-paged test-dist bench-quant bench-kv bench-paged
+.PHONY: test test-quant test-paged test-prefix test-dist bench-quant bench-kv bench-paged bench-prefix
 
 test:
 	sh scripts/ci.sh
@@ -8,6 +8,9 @@ test-quant:
 
 test-paged:
 	PYTHONPATH=src python -m pytest -q tests/test_paged.py
+
+test-prefix:
+	PYTHONPATH=src python -m pytest -q tests/test_kv_pool_prop.py tests/test_prefix.py
 
 test-dist:
 	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -21,3 +24,6 @@ bench-kv:
 
 bench-paged:
 	PYTHONPATH=src python -m benchmarks.run paged
+
+bench-prefix:
+	PYTHONPATH=src python -m benchmarks.run prefix

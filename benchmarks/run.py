@@ -18,6 +18,11 @@ Prints ``name,us_per_call,derived`` CSV rows.
   paged    — paged KV block pool: cache bytes + effective sequences/GiB vs
              contiguous slots (fp and int8 pages), decode-tick wall-clock,
              and a traffic-mix run with per-tick scheduler metrics (JSON)
+  prefix   — prefix-sharing / copy-on-write pages: physical pages for
+             shared-system-prompt traffic with vs without sharing, the
+             effective sequences/GiB multiplier on top of the paged
+             baseline, n-sample parallel sampling page cost, and a measured
+             run with shared_pages / cow_copies telemetry (JSON)
 
 Run: PYTHONPATH=src python -m benchmarks.run [section ...]
 """
@@ -357,6 +362,83 @@ def paged() -> None:
     }))
 
 
+def prefix() -> None:
+    """Prefix sharing / copy-on-write pages (serving/prefix_index.py): heavy
+    shared-system-prompt traffic stores the preamble's pages ONCE.  Reports
+    (a) analytic per-sequence page cost and the effective sequences/GiB
+    multiplier over the PR 3 paged baseline; (b) a measured run — identical
+    traffic through the paged engine with and without sharing, comparing
+    peak physical pages, with per-tick shared_pages / cow_copies telemetry
+    as JSON; (c) the n-sample parallel sampling page cost (all prompt pages
+    shared, divergence via CoW)."""
+    import json
+
+    from repro.core.prmoe import nlg_moe
+    from repro.models.model import init_params
+    from repro.serving.continuous import ContinuousEngine
+    from repro.serving.engine import Request
+
+    ps = 16
+    # analytic: 32-token shared preamble (2 pages), 16-token unique tail +
+    # generation (1 page) per sequence, N concurrent sequences
+    pre_pages, tail_pages = 2, 1
+    for n_seqs in (8, 64):
+        base = pre_pages + tail_pages  # PR 3 paged: every seq pays the preamble
+        shared = tail_pages + pre_pages / n_seqs  # preamble amortized
+        emit(f"prefix_pages_per_seq_{n_seqs}seqs", 0.0,
+             f"paged={base},shared={shared:.2f},"
+             f"seqs_per_GiB_multiplier={base/shared:.2f}x_on_top_of_paged")
+
+    cfg = nlg_moe("prefix-bench", 4, 256, 4, 16, vocab=1024).replace(
+        param_dtype="float32", compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(1)
+    preamble = jax.random.randint(rng, (32,), 0, cfg.vocab_size).tolist()
+    tails = [jax.random.randint(jax.random.fold_in(rng, i), (8,), 0,
+                                cfg.vocab_size).tolist() for i in range(6)]
+    reqs = [Request(prompt=preamble + t, max_new_tokens=8) for t in tails]
+
+    rows = {}
+    peng = None
+    for mode in ("paged", "prefix"):
+        eng = ContinuousEngine(cfg, params, slots=6, capacity=128, paged=True,
+                               page_size=ps, n_pages=36,
+                               prefix_sharing=(mode == "prefix"))
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done()
+        peak_used = eng.n_pages - min(m["free_pages"] for m in eng.metrics_log)
+        rows[mode] = peak_used  # counters only — don't keep both engines' caches alive
+        if mode == "prefix":
+            peng = eng
+        emit(f"prefix_peak_pages_{mode}", 0.0,
+             f"peak_used={peak_used}/{eng.n_pages},min_free={eng.n_pages - peak_used}")
+    used_paged, used_prefix = rows["paged"], rows["prefix"]
+    emit("prefix_page_reduction", 0.0,
+         f"{used_paged}/{used_prefix}={used_paged/max(used_prefix,1):.2f}x_fewer_live_pages,"
+         f"hits={peng.prefix_hits},shared_tokens={peng.prefix_hit_tokens},"
+         f"cow_copies={peng.cow_copies}")
+
+    # parallel sampling: n samples off one prompt share ALL its pages
+    n = 4
+    eng = ContinuousEngine(cfg, params, slots=n, capacity=128, paged=True,
+                           page_size=ps, n_pages=32, prefix_sharing=True)
+    eng.submit_n(Request(prompt=preamble + tails[0], max_new_tokens=8), n)
+    fork_pages = eng.pool.used_count
+    solo_pages = eng.pool.pages_for(len(preamble) + len(tails[0]))
+    eng.run_until_done()
+    emit("prefix_n_sample_fork_pages", 0.0,
+         f"n={n},pages_at_admission={fork_pages}(vs_independent={n * solo_pages}),"
+         f"cow_copies={eng.cow_copies}")
+    print("# prefix_metrics_json:", json.dumps({
+        "config": {"slots": 6, "capacity": 128, "page_size": ps, "n_pages": 36},
+        "prefix_hits": peng.prefix_hits,
+        "prefix_hit_tokens": peng.prefix_hit_tokens,
+        "cow_copies": peng.cow_copies,
+        "ticks": peng.metrics_log,
+    }))
+
+
 SECTIONS = {
     "table3": table3,
     "fig10": fig10,
@@ -369,6 +451,7 @@ SECTIONS = {
     "quant": quant,
     "kv_quant": kv_quant,
     "paged": paged,
+    "prefix": prefix,
 }
 
 

@@ -1,0 +1,68 @@
+"""Prefix-sharing / copy-on-write paged serving demo.
+
+Serving traffic that repeats a system prompt (here: every request opens
+with the same 32-token preamble) stores the preamble's KV pages ONCE: each
+admission looks the preamble up in the radix prefix index, points its block
+table at the existing physical pages (refcounted), and prefills only its
+unique tail.  Parallel sampling goes further — n samples of one prompt
+share ALL its pages and diverge lazily, each copy-on-writing the boundary
+page right before its first divergent append.
+
+Greedy outputs are token-identical to the unshared paged engine (the decode
+read path never changes — tables just point at shared pages); the win is
+physical pages, i.e. concurrent sequences per GiB of cache.
+
+  PYTHONPATH=src python examples/prefix_sharing.py
+"""
+import numpy as np
+
+import jax
+
+from repro.core.prmoe import nlg_moe
+from repro.models.model import init_params
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request
+
+VOCAB = 512
+
+
+def main() -> None:
+    cfg = nlg_moe("prefix-demo-moe", 4, 192, 4, 16, vocab=VOCAB).replace(
+        param_dtype="float32", compute_dtype="float32"
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    system_prompt = rng.integers(1, VOCAB, size=32).tolist()  # 2 pages of 16
+    reqs = [Request(prompt=system_prompt + rng.integers(1, VOCAB, size=6).tolist(),
+                    max_new_tokens=10)
+            for _ in range(6)]
+
+    outs = {}
+    for sharing in (False, True):
+        eng = ContinuousEngine(cfg, params, slots=6, capacity=96, paged=True,
+                               page_size=16, n_pages=30, prefix_sharing=sharing)
+        ids = [eng.submit(r) for r in reqs]
+        done = eng.run_until_done()
+        outs[sharing] = [done[i].tokens for i in ids]
+        peak_used = eng.n_pages - min(m["free_pages"] for m in eng.metrics_log)
+        tag = "prefix-shared" if sharing else "paged (no sharing)"
+        extra = (f", hits={eng.prefix_hits}, shared_tokens={eng.prefix_hit_tokens}, "
+                 f"cow_copies={eng.cow_copies}") if sharing else ""
+        print(f"{tag:>20}: peak live pages {peak_used}/{eng.n_pages}{extra}")
+    assert outs[False] == outs[True], "sharing must not change greedy outputs"
+    print("greedy outputs token-identical with and without sharing")
+
+    # parallel sampling: 4 greedy samples off one prompt = one set of pages
+    eng = ContinuousEngine(cfg, params, slots=4, capacity=96, paged=True,
+                           page_size=16, n_pages=24, prefix_sharing=True)
+    rids = eng.submit_n(reqs[0], 4)
+    print(f"n=4 samples admitted on {eng.pool.used_count} physical pages "
+          f"(independent admissions would take {4 * eng.pool.pages_for(38)})")
+    done = eng.run_until_done()
+    assert all(done[r].tokens == done[rids[0]].tokens for r in rids)  # greedy
+    print(f"samples decoded to completion, cow_copies={eng.cow_copies}, "
+          f"pool drained={eng.pool.free_count == eng.n_pages}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,11 @@ python -m pytest -q tests/test_quant.py tests/test_kv_quant.py
 # paged-vs-contiguous greedy parity, preemption/fragmentation scheduling
 python -m pytest -q tests/test_paged.py
 
+# prefix-sharing stage: refcount/CoW pool property fuzz (hypothesis, or the
+# tests/_hyp.py single-draw shim), prefix-index semantics, shared-page
+# parity vs the non-prefix engine, and the randomized scheduler fuzz
+python -m pytest -q tests/test_kv_pool_prop.py tests/test_prefix.py
+
 python -m pytest -x -q --ignore=tests/test_dist.py
 
 # dist tier (jax-compat shim in parallel/compat.py + the dense-dispatch

@@ -142,10 +142,21 @@ class PagedKVConfig:
                pages than the worst case is the point: admission goes by
                free-block count and the scheduler preempts the youngest slot
                if traffic outruns the pool.
+    prefix_sharing: refcounted copy-on-write page sharing
+               (serving/prefix_index.py): admissions whose context repeats an
+               indexed full-page prefix (shared system prompts, few-shot
+               preambles) point their block table at the existing physical
+               pages instead of allocating and re-writing them, and parallel
+               samples (``ContinuousEngine.submit_n`` / serve.py
+               ``--n-samples``) share ALL prompt pages, diverging via
+               copy-on-write.  Greedy outputs are token-identical to the
+               non-shared paged engine; the win is pages — a prefix shared by
+               N sequences costs 1/N of the pages per sequence.
     """
 
     page_size: int = 16
     n_pages: int = 0
+    prefix_sharing: bool = False
 
 
 @dataclass(frozen=True)

@@ -9,6 +9,11 @@ pool (serving/kv_pool.py): cache memory becomes a shared pool of
 ``--page-size``-token pages, requests are admitted by free-block count, and
 ``--pages`` oversubscribes the pool below the contiguous worst case.
 Composes with ``--kv-bits 8`` (int8 pages) and ``--quant-bits``.
+
+``--prefix-sharing`` adds refcounted copy-on-write page sharing: admissions
+whose context repeats an indexed full-page prefix point their block tables
+at the existing physical pages, and ``--n-samples N`` serves N parallel
+samples per prompt off one set of prompt pages (diverging via CoW).
 """
 from __future__ import annotations
 
@@ -59,7 +64,23 @@ def main() -> None:
                          "slots * ceil(capacity / page_size), no oversubscription)")
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots for --paged (default: --batch)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="with --paged: refcounted copy-on-write page sharing "
+                         "— contexts repeating an indexed full-page prefix "
+                         "point their block tables at the existing pages "
+                         "(serving/prefix_index.py)")
+    ap.add_argument("--n-samples", type=int, default=1,
+                    help="parallel samples per prompt (paged continuous "
+                         "engine); with --prefix-sharing the samples share "
+                         "ALL prompt pages and diverge via copy-on-write")
     args = ap.parse_args()
+    if args.prefix_sharing and not args.paged:
+        ap.error("--prefix-sharing requires --paged (block tables)")
+    if args.n_samples > 1 and not args.paged:
+        ap.error("--n-samples > 1 is served by the paged continuous engine; "
+                 "pass --paged")
+    if args.n_samples < 1:
+        ap.error(f"--n-samples must be >= 1, got {args.n_samples}")
     if args.temperature <= 0.0 and (args.top_k or args.top_p):
         ap.error("--top-k/--top-p have no effect at --temperature 0 (greedy); "
                  "pass --temperature > 0")
@@ -123,6 +144,7 @@ def main() -> None:
         kv_cache_bits=args.kv_bits,
         page_size=args.page_size if args.paged else 0,
         n_pages=args.pages,
+        prefix_sharing=args.prefix_sharing,
     )
     eng = None if args.paged else Engine(cfg, params, ec)
     if args.kv_bits and eng is not None:
@@ -156,7 +178,8 @@ def main() -> None:
 
         # the page knobs ride on EngineConfig (built above) and are handed to
         # the continuous engine as a PagedKVConfig bundle
-        pcfg = PagedKVConfig(page_size=ec.page_size, n_pages=ec.n_pages)
+        pcfg = PagedKVConfig(page_size=ec.page_size, n_pages=ec.n_pages,
+                             prefix_sharing=args.prefix_sharing)
         slots = args.slots or args.batch
         capacity = args.prompt_len + args.new_tokens
         ceng = ContinuousEngine(
@@ -180,7 +203,10 @@ def main() -> None:
         ceng.preemptions = 0
         ceng.metrics_log.clear()
         t0 = time.time()
-        ids = [ceng.submit(r) for r in reqs]
+        if args.n_samples > 1:
+            ids = [rid for r in reqs for rid in ceng.submit_n(r, args.n_samples)]
+        else:
+            ids = [ceng.submit(r) for r in reqs]
         done = ceng.run_until_done()
         dt = time.time() - t0
         n_tok = sum(len(done[i].tokens) for i in ids)
@@ -189,6 +215,12 @@ def main() -> None:
               f"({n_tok/dt:.1f} tok/s, arch={cfg.name}, paged, "
               f"preemptions={ceng.preemptions}, peak_occupancy="
               f"{max((r.get('page_occupancy', 0.0) for r in ceng.metrics_log), default=0.0):.2f})")
+        if args.prefix_sharing:
+            peak_shared = max((r.get("shared_pages", 0) for r in ceng.metrics_log),
+                              default=0)
+            print(f"prefix sharing: hits={ceng.prefix_hits}, "
+                  f"shared_tokens={ceng.prefix_hit_tokens}, "
+                  f"peak_shared_pages={peak_shared}, cow_copies={ceng.cow_copies}")
         print("last tick metrics:", m)
         print("sample:", done[ids[0]].tokens[:10])
         return

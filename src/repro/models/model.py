@@ -339,6 +339,54 @@ def paged_reset_pages(cfg: ModelConfig, caches: dict, page_mask: jax.Array) -> d
     return out
 
 
+def _copy_axis1(buf: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """Copy one index of axis 1 — the page axis of pool leaves
+    ``[repeats, n_pages + 1, page_size, ...]`` and the batch axis of
+    per-slot leaves ``[repeats, slots, ...]``."""
+    one = jax.lax.dynamic_slice_in_dim(buf, src, 1, axis=1)
+    return jax.lax.dynamic_update_slice_in_dim(buf, one, dst, axis=1)
+
+
+def paged_copy_page(cfg: ModelConfig, caches: dict, src, dst) -> dict:
+    """Copy one physical page's contents ``src -> dst`` in every paged
+    layer's pool (k, v, and pos; (q, scale) pairs verbatim for int8 pools) —
+    the device half of copy-on-write.  The scheduler calls this after
+    ``KVBlockPool.fork`` hands the diverging slot a fresh page and before the
+    slot's next append, so the shared original is never written.  ``src`` /
+    ``dst`` are traced scalars: every CoW hits one compilation."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    out = {}
+    for sk, pk, ls, paged in _layer_entries(cfg):
+        c = dict(caches[sk][pk])
+        if paged:
+            c["self"] = jax.tree.map(lambda b: _copy_axis1(b, src, dst), c["self"])
+        out.setdefault(sk, {})[pk] = c
+    return out
+
+
+def paged_copy_slot_leaves(cfg: ModelConfig, caches: dict, src, dst) -> dict:
+    """Copy every PER-SLOT cache leaf's row ``src -> dst``: window rings,
+    SSM/LRU states, cross caches — everything that is not in a shared page
+    pool.  Parallel sampling forks a freshly-admitted slot this way: the
+    fork's block table points at the base's pages (pool ``share``), and the
+    non-paged state is duplicated row-wise so both samples carry identical
+    prompt context.  ``src`` / ``dst`` are traced scalars."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    out = {}
+    for sk, pk, ls, paged in _layer_entries(cfg):
+        c_old = caches[sk][pk]
+        c = {}
+        for key in c_old:
+            if key == "self" and paged:
+                c[key] = c_old[key]  # shared pool — the table carries the fork
+            else:
+                c[key] = jax.tree.map(lambda b: _copy_axis1(b, src, dst), c_old[key])
+        out.setdefault(sk, {})[pk] = c
+    return out
+
+
 def paged_prefill_into_slot(
     cfg: ModelConfig,
     params: dict,
@@ -351,12 +399,24 @@ def paged_prefill_into_slot(
     capacity: int,
     kv_bits: int = 0,
     memory: Optional[jax.Array] = None,
+    scatter_start=0,  # [] int32 (traced ok) — first position written to pages
 ) -> Tuple[jax.Array, dict]:
     """Admission prefill for paged serving: run the ordinary contiguous
     prefill into a temporary single-sequence cache (identical numerics to the
     non-paged path), then scatter the filled K/V into the slot's block-table
     pages and dynamic-update the per-slot leaves at ``slot``.  The scheduler
-    must have mapped ``ceil(S / page_size)`` pages into ``table_row``."""
+    must have mapped ``ceil(S / page_size)`` pages into ``table_row``.
+
+    ``scatter_start`` supports prefix sharing: positions below it already
+    live in pages SHARED with other slots (mapped into ``table_row`` by the
+    scheduler), so their writes are routed to the trash page — a shared page
+    is never mutated by an admission, only read through the table.  The
+    prefill compute still covers the full context (so the tail's attention
+    and the per-slot ring/SSM leaves are exact); writing only the tail is
+    the memory win now, computing only the tail (chunked prefill directly
+    into pages, reading the shared prefix from the pool) is the ROADMAP
+    follow-on.  It is a traced scalar, so varying prefix lengths hit one
+    compilation per prompt length, same as before."""
     S = tokens.shape[1]
     assert S <= capacity, f"prompt {S} exceeds per-sequence capacity {capacity}"
     x = embed_tokens(cfg, params, tokens)
@@ -364,6 +424,7 @@ def paged_prefill_into_slot(
     x, filled, _ = _run_segments(cfg, params, x, positions, one_caches, "prefill", memory, False)
     logits = logits_out(cfg, params, x[:, -1:])[:, 0]
     pos_vec = positions[0].astype(jnp.int32)  # [S]
+    start = jnp.asarray(scatter_start, jnp.int32)
 
     def _write_slot(pool, one):
         return jax.lax.dynamic_update_slice_in_dim(pool, one.astype(pool.dtype), slot, axis=1)
@@ -374,7 +435,7 @@ def paged_prefill_into_slot(
         # prompt written at 0..S-1
         Pt, ps = pool["pos"].shape[1], pool["pos"].shape[2]
         pages = table_row[pos_vec // ps]
-        pages = jnp.where(pages < 0, Pt - 1, pages).astype(jnp.int32)
+        pages = jnp.where((pages < 0) | (pos_vec < start), Pt - 1, pages).astype(jnp.int32)
         offs = pos_vec % ps
 
         def scat(buf, vals):

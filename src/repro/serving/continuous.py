@@ -22,6 +22,21 @@ Two KV-storage models share the scheduler:
     Effective concurrent sequences per byte now scale with actual sequence
     lengths, not the worst case — and multiply with ``kv_cache_bits=8``.
 
+Paged mode optionally adds **prefix sharing with copy-on-write**
+(``prefix_sharing=True``): a radix index over full-page token chunks
+(serving/prefix_index.py) maps live prompt prefixes to physical pages, so a
+request whose context repeats an admitted prefix — shared system prompts,
+few-shot preambles — points its block table at the existing pages
+(refcounted via ``KVBlockPool.share``) and only the tail is written at
+prefill.  Parallel sampling (``submit_n``) rides the same mechanism: n
+samples of one prompt share ALL its pages, including the partially-filled
+boundary page, and diverge lazily — before a slot appends into a page with
+refcount > 1, the scheduler forks it a private copy (``pool.fork`` +
+``paged_copy_page``), so a page visible to another slot is never mutated.
+The decode read path is untouched by construction (tables just point at
+shared pages), which is what makes greedy parity against the non-shared
+paged engine a strict end-to-end oracle.
+
 Static shapes throughout: slot pool, page pool, and block tables are all
 fixed, so the jitted decode step never recompiles as traffic arrives/leaves
 — the property that makes continuous batching viable under XLA.
@@ -40,6 +55,8 @@ from repro.configs.base import ModelConfig, PagedKVConfig
 from repro.models.model import (
     init_caches,
     init_paged_caches,
+    paged_copy_page,
+    paged_copy_slot_leaves,
     paged_prefill_into_slot,
     paged_ragged_decode_step,
     paged_reset_pages,
@@ -48,6 +65,7 @@ from repro.models.model import (
 )
 from repro.serving.engine import Request, Response
 from repro.serving.kv_pool import BlockTables, KVBlockPool
+from repro.serving.prefix_index import PrefixIndex
 from repro.serving.sampling import sample
 
 
@@ -66,19 +84,29 @@ class SlotState:
     # here instead would duplicate the generated prefix on a second
     # preemption of the same request.
     prompt: List[int] = field(default_factory=list)
+    # Last-context-token logits from this slot's admission prefill ([1, V]
+    # numpy), kept under prefix sharing so parallel-sample forks admitted
+    # before the base's first decode tick can draw their first token without
+    # recomputing the prefill.
+    prefill_logits: Optional[np.ndarray] = None
 
 
 @dataclass
 class _Pending:
     """Queue entry.  ``generated`` is non-empty for preempted requests: on
     re-admission the engine prefills over ``prompt + generated`` so greedy
-    decoding resumes exactly where it left off."""
+    decoding resumes exactly where it left off.  ``fork_of`` >= 0 marks a
+    parallel sample of the request with that id (submit_n): if its base is
+    still at its admission state when this entry reaches the queue head, the
+    fork shares ALL the base's pages instead of prefilling; otherwise it
+    degrades to an ordinary request (prefix-index sharing still applies)."""
 
     rid: int
     prompt: List[int]
     budget: int  # total response budget (already clamped to capacity - 1)
     generated: List[int]
     prompt_len: int
+    fork_of: int = -1
 
 
 class ContinuousEngine:
@@ -93,16 +121,21 @@ class ContinuousEngine:
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
                  eos_id: int = -1, seed: int = 0, kv_cache_bits: int = 0,
                  paged: bool = False, page_size: Optional[int] = None,
-                 n_pages: Optional[int] = None,
+                 n_pages: Optional[int] = None, prefix_sharing: bool = False,
                  paged_cfg: Optional[PagedKVConfig] = None):
         if paged_cfg is not None:
             # bundled form of the same knobs (configs.base.PagedKVConfig);
             # mixing it with the loose kwargs would silently shadow them
-            if paged or page_size is not None or n_pages is not None:
-                raise ValueError("pass either paged_cfg or paged/page_size/n_pages, not both")
+            if paged or page_size is not None or n_pages is not None or prefix_sharing:
+                raise ValueError(
+                    "pass either paged_cfg or paged/page_size/n_pages/prefix_sharing, not both"
+                )
             paged = True
             page_size = paged_cfg.page_size
             n_pages = paged_cfg.n_pages
+            prefix_sharing = paged_cfg.prefix_sharing
+        if prefix_sharing and not paged:
+            raise ValueError("prefix_sharing requires paged=True (block tables)")
         self.cfg = cfg
         from repro.quant import prepare_params_for_serving
 
@@ -115,6 +148,8 @@ class ContinuousEngine:
         self.eos_id = eos_id
         self.kv_cache_bits = kv_cache_bits
         self.paged = paged
+        self.prefix_sharing = prefix_sharing
+        self.prefix: Optional[PrefixIndex] = None
         if paged:
             self.page_size = page_size = int(page_size or 16)
             self.max_pages = -(-capacity // page_size)  # table entries per slot
@@ -128,6 +163,8 @@ class ContinuousEngine:
                 )
             self.pool = KVBlockPool(self.n_pages, page_size)
             self.tables = BlockTables(slots, self.max_pages)
+            if prefix_sharing:
+                self.prefix = PrefixIndex(page_size)
             # kv_cache_bits=8 composes: int8 pages (~4x fewer bytes per cache
             # token) x fragmentation-free packing of those tokens
             self.caches = init_paged_caches(
@@ -143,6 +180,9 @@ class ContinuousEngine:
         self.queue: List[_Pending] = []
         self.done: Dict[int, Response] = {}
         self.preemptions = 0
+        self.cow_copies = 0  # pages privately duplicated before a divergent append
+        self.prefix_hits = 0  # admissions that shared at least one indexed page
+        self.prefix_hit_tokens = 0  # context tokens served from shared pages
         self.metrics_log: List[dict] = []
         self._metrics_cap = 65_536  # keep a bounded telemetry window
         self.last_metrics: dict = {}
@@ -160,15 +200,25 @@ class ContinuousEngine:
 
             self._decode = jax.jit(_step, donate_argnums=(4,))
 
-            def _prefill_one(params, tokens, positions, slot, caches, table_row):
+            def _prefill_one(params, tokens, positions, slot, caches, table_row, scatter_start):
                 return paged_prefill_into_slot(
                     cfg, params, tokens, positions, slot, caches, table_row,
                     capacity=capacity, kv_bits=kv_cache_bits,
+                    scatter_start=scatter_start,
                 )
 
             self._prefill = jax.jit(_prefill_one, donate_argnums=(4,))
             self._reset_pages = jax.jit(
                 lambda caches, mask: paged_reset_pages(cfg, caches, mask),
+                donate_argnums=(0,),
+            )
+            # CoW device copy + parallel-sampling slot fork (src/dst traced)
+            self._copy_page = jax.jit(
+                lambda caches, src, dst: paged_copy_page(cfg, caches, src, dst),
+                donate_argnums=(0,),
+            )
+            self._copy_slot = jax.jit(
+                lambda caches, src, dst: paged_copy_slot_leaves(cfg, caches, src, dst),
                 donate_argnums=(0,),
             )
         else:
@@ -184,49 +234,143 @@ class ContinuousEngine:
             self._prefill = jax.jit(_prefill_one, donate_argnums=(4,))
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> int:
-        rid = self._next_id
-        self._next_id += 1
+    def _clamped_budget(self, req: Request) -> int:
         # Budget clamp: the response plus at least one context token must fit
         # the per-sequence capacity (a budget >= capacity used to flip the
         # prompt-truncation index positive and keep the WRONG end of the
         # prompt — or nothing at all).
-        budget = max(1, min(req.max_new_tokens, self.capacity - 1))
+        return max(1, min(req.max_new_tokens, self.capacity - 1))
+
+    def submit(self, req: Request) -> int:
+        rid = self._next_id
+        self._next_id += 1
         self.queue.append(_Pending(
-            rid=rid, prompt=list(req.prompt), budget=budget,
+            rid=rid, prompt=list(req.prompt), budget=self._clamped_budget(req),
             generated=[], prompt_len=len(req.prompt),
         ))
         self._admit()
         return rid
 
+    def submit_n(self, req: Request, n: int) -> List[int]:
+        """Submit ``n`` parallel samples of one prompt (one request id each).
+        Under ``prefix_sharing`` the samples are page-aligned: the first is
+        admitted normally and the rest fork it — block tables share ALL its
+        prompt pages (including the partial boundary page) and per-slot
+        ring/SSM/cross state is row-copied, so n samples cost one prompt's
+        pages + one prefill until they diverge via copy-on-write.  Without
+        sharing (or when slots/pages force staggered admission) each sample
+        is served as an independent request — same tokens, no sharing."""
+        if n < 1:
+            raise ValueError(f"need n >= 1 samples, got {n}")
+        budget = self._clamped_budget(req)
+        rids: List[int] = []
+        for j in range(n):
+            rid = self._next_id
+            self._next_id += 1
+            self.queue.append(_Pending(
+                rid=rid, prompt=list(req.prompt), budget=budget,
+                generated=[], prompt_len=len(req.prompt),
+                fork_of=rids[0] if j else -1,
+            ))
+            rids.append(rid)
+        self._admit()
+        return rids
+
+    # ------------------------------------------------------------------
+    def _fork_base_slot(self, item: _Pending) -> Optional[int]:
+        """Slot index of ``item``'s fork base, iff the base is still exactly
+        at its admission state: active, no decode tick since admission (its
+        cache holds the prompt and nothing else — the single generated token
+        is sampled but not yet written), prefill logits stashed.  Any other
+        state means the boundary page already holds divergent tokens, so the
+        fork must not share it and degrades to a normal admission."""
+        if self.prefix is None or item.fork_of < 0:
+            return None
+        for b, s in enumerate(self.slots):
+            if (s.active and s.request_id == item.fork_of
+                    and len(s.generated) == 1 and s.prefill_logits is not None):
+                return b
+        return None
+
+    def _admit_fork(self, i: int, b: int, item: _Pending) -> None:
+        """Admit ``item`` into slot ``i`` as a page-aligned parallel sample of
+        slot ``b``: share every page ``b`` holds (refcount + 1 each), point
+        ``i``'s table at them, row-copy the per-slot leaves (window rings,
+        SSM/LRU, cross), and draw the fork's first token from the base's
+        stashed prefill logits.  Zero new pages, zero prefill compute; the
+        first divergent append copy-on-writes the boundary page."""
+        base = self.slots[b]
+        pages = [int(p) for p in self.tables.row(b) if p >= 0]
+        self.pool.share(pages, owner=i)
+        self.tables.copy_row(i, b)
+        self.caches = self._copy_slot(
+            self.caches, jnp.asarray(b, jnp.int32), jnp.asarray(i, jnp.int32)
+        )
+        self._key, sub = jax.random.split(self._key)
+        first = int(sample(jnp.asarray(base.prefill_logits), sub,
+                           temperature=self.temperature,
+                           top_k=self.top_k, top_p=self.top_p)[0])
+        self.slots[i] = SlotState(
+            request_id=item.rid, pos=base.pos, generated=[first],
+            budget=item.budget, active=True, admit_seq=self._admit_counter,
+            prompt_len=item.prompt_len, prompt=item.prompt,
+            prefill_logits=base.prefill_logits,
+        )
+        self._admit_counter += 1
+        self._cur_token[i] = first
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += base.pos
+        self._finish_if_done(i)
+
     def _admit(self) -> None:
         """FIFO admission: fill free slots from the queue head.  In paged
         mode a request is only admitted when the pool has enough free pages
         for its prompt (admission by free-block count); the queue head blocks
-        rather than being skipped, so long requests cannot starve."""
+        rather than being skipped, so long requests cannot starve.  Under
+        prefix sharing, pages covering an indexed full-page prefix of the
+        context are shared rather than allocated, and only the tail is
+        prefilled into fresh pages."""
         while self.queue:
             free = [i for i, s in enumerate(self.slots) if not s.active]
             if not free:
                 return
             i = free[0]
             item = self.queue[0]
+            fork_base = self._fork_base_slot(item)
+            if fork_base is not None:
+                self.queue.pop(0)
+                self._admit_fork(i, fork_base, item)
+                continue
             remaining = item.budget - len(item.generated)
             # keep the LAST (capacity - remaining) context tokens: the newest
             # prompt suffix, leaving exactly `remaining` cache tokens to decode
             keep = self.capacity - remaining
             ctx = (item.prompt + item.generated)[-keep:]
+            shared: List[int] = []
             if self.paged:
-                pages = self.pool.alloc(self.pool.pages_for(len(ctx)), owner=i)
-                if pages is None:
+                if self.prefix is not None:
+                    # cap the match so at least one context token is left to
+                    # prefill — last-token logits seed the first sample
+                    shared = self.prefix.lookup(ctx, max_tokens=len(ctx) - 1)
+                fresh = self.pool.alloc(
+                    self.pool.pages_for(len(ctx)) - len(shared), owner=i)
+                if fresh is None:
                     return  # wait for frees / completions
-                self.tables.append(i, pages)
+                if shared:
+                    self.pool.share(shared, owner=i)
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += len(shared) * self.page_size
+                self.tables.append(i, shared + fresh)
             self.queue.pop(0)
             toks = jnp.asarray(np.asarray(ctx, np.int32)[None])
             pos = jnp.arange(len(ctx), dtype=jnp.int32)[None]
             if self.paged:
+                # shared-prefix positions are routed to the trash page inside
+                # the scatter: a shared page is never written by an admission
                 logits, self.caches = self._prefill(
                     self.params, toks, pos, jnp.asarray(i, jnp.int32), self.caches,
                     jnp.asarray(self.tables.row(i)),
+                    jnp.asarray(len(shared) * self.page_size, jnp.int32),
                 )
             else:
                 logits, self.caches = self._prefill(
@@ -235,24 +379,38 @@ class ContinuousEngine:
             self._key, sub = jax.random.split(self._key)
             first = int(sample(logits, sub, temperature=self.temperature,
                                top_k=self.top_k, top_p=self.top_p)[0])
+            stash = np.asarray(logits) if self.prefix is not None else None
             self.slots[i] = SlotState(
                 request_id=item.rid, pos=len(ctx), generated=item.generated + [first],
                 budget=item.budget, active=True, admit_seq=self._admit_counter,
                 prompt_len=item.prompt_len, prompt=item.prompt,
+                prefill_logits=stash,
             )
             self._admit_counter += 1
             self._cur_token[i] = first
+            if self.prefix is not None:
+                # register this context's full pages (shared entries are
+                # already indexed and keep their mapping; fresh full pages
+                # become shareable for future admissions)
+                n_full = len(ctx) // self.page_size
+                if n_full:
+                    self.prefix.insert(ctx, [int(p) for p in self.tables.row(i)[:n_full]])
             self._finish_if_done(i)
 
     def _release_slot(self, i: int) -> None:
         if self.paged:
-            pages = self.pool.release(i)
+            # decref everything the slot holds; only pages whose refcount hit
+            # zero are actually freed — pages another slot still references
+            # stay live, mapped, and (if full) indexed for future sharing
+            freed = self.pool.release(i)
             self.tables.reset(i)
-            if pages:
+            if freed:
+                if self.prefix is not None:
+                    self.prefix.evict_pages(freed)
                 # invalidate the recycled pages' positions device-side, or a
                 # later owner would see the previous occupant's stale K/V
                 mask = np.zeros((self.n_pages + 1,), bool)
-                mask[pages] = True
+                mask[freed] = True
                 self.caches = self._reset_pages(self.caches, jnp.asarray(mask))
         self.slots[i] = SlotState()
 
@@ -281,11 +439,25 @@ class ContinuousEngine:
         self._release_slot(i)
         self.preemptions += 1
 
+    def _youngest_active(self) -> int:
+        return max(
+            (j for j, s in enumerate(self.slots) if s.active),
+            key=lambda j: self.slots[j].admit_seq,
+        )
+
     def _ensure_pages(self) -> None:
-        """Lazy table growth: before a decode tick, every active slot needs a
-        page mapped for its write position.  Oldest slots grow first; when
-        the pool is dry the *youngest* active slot is preempted (LIFO — the
-        request with the least sunk prefill/decode work re-queues)."""
+        """Pre-tick page discipline, per active slot in admission order:
+
+        1. **Lazy table growth** — map a page for the slot's write position;
+           when the pool is dry the *youngest* active slot is preempted
+           (LIFO — the request with the least sunk prefill/decode work
+           re-queues).
+        2. **Copy-on-write** — if the write-position page has refcount > 1
+           (a prefix/fork sharer), fork it: allocate a private page, copy the
+           device contents, remap this slot's table entry, decref the
+           original.  After this pass every active slot's write page has
+           refcount 1, which is the invariant that makes shared pages
+           read-only under decode."""
         order = sorted(
             (i for i, s in enumerate(self.slots) if s.active),
             key=lambda i: self.slots[i].admit_seq,
@@ -297,19 +469,34 @@ class ContinuousEngine:
                 if got is not None:
                     self.tables.append(i, got)
                     continue
-                victim = max(
-                    (j for j, s in enumerate(self.slots) if s.active),
-                    key=lambda j: self.slots[j].admit_seq,
-                )
+                victim = self._youngest_active()
                 self._preempt(victim)
                 if victim == i:
                     break  # this slot itself re-queued; stop growing it
+            while self.slots[i].active:
+                entry = slot.pos // self.page_size
+                page = int(self.tables.row(i)[entry])
+                if self.pool.refcount(page) <= 1:
+                    break
+                new = self.pool.fork(page, i)
+                if new is None:
+                    victim = self._youngest_active()
+                    self._preempt(victim)
+                    if victim == i:
+                        break  # re-queued; a sharer keeps the page alive
+                    continue  # a preemption may even have dropped the refcount
+                self.caches = self._copy_page(
+                    self.caches, jnp.asarray(page, jnp.int32), jnp.asarray(new, jnp.int32)
+                )
+                self.tables.set_entry(i, entry, new)
+                self.cow_copies += 1
 
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One decode tick over all active slots.  Returns #active slots.
         Per-tick scheduler telemetry lands in ``last_metrics`` /
-        ``metrics_log`` (active slots, free pages, tok/s, preemptions)."""
+        ``metrics_log`` (active slots, free/shared pages, CoW copies, tok/s,
+        preemptions)."""
         t0 = time.perf_counter()
         active = np.asarray([s.active for s in self.slots])
         if not active.any():
@@ -346,6 +533,9 @@ class ContinuousEngine:
                 continue
             slot.pos += 1
             slot.generated.append(int(nxt[i]))
+            # the stashed admission logits are only consumable by a fork
+            # BEFORE the base's first decode tick — drop the dead copy
+            slot.prefill_logits = None
             self._cur_token[i] = int(nxt[i])
             self._finish_if_done(i)
         self._record_metrics(n_active, time.perf_counter() - t0)
@@ -364,6 +554,11 @@ class ContinuousEngine:
         if self.paged:
             m["free_pages"] = self.pool.free_count
             m["page_occupancy"] = round(self.pool.occupancy, 4)
+            m["shared_pages"] = self.pool.shared_count
+            m["cow_copies"] = self.cow_copies
+            if self.prefix is not None:
+                m["prefix_hits"] = self.prefix_hits
+                m["prefix_hit_tokens"] = self.prefix_hit_tokens
         self.last_metrics = m
         self.metrics_log.append(m)
         if len(self.metrics_log) > self._metrics_cap:

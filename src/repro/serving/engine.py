@@ -43,6 +43,7 @@ class EngineConfig:
     # The static batched Engine always uses contiguous per-row caches.
     page_size: int = 0  # >0 = serve with a paged block pool
     n_pages: int = 0  # 0 = auto (slots * pages-per-capacity, no oversubscription)
+    prefix_sharing: bool = False  # refcounted CoW page sharing (needs page_size > 0)
 
 
 @dataclass

@@ -1,0 +1,252 @@
+"""Property-fuzzed KVBlockPool invariants (prefix-sharing / CoW refcounts).
+
+Random alloc/share/fork/drop/release/preempt traces are driven against a
+pure-python shadow model; after every operation the pool must satisfy:
+
+  * refcounts are never negative and always equal the holder-set size;
+  * no page is simultaneously on the freelist and referenced;
+  * accounting is exact — ``free_count + used_count == n_pages`` and the sum
+    of per-reference shares ``1/refcount(p)`` over every (page, holder)
+    reference equals ``used_count`` exactly (computed in Fractions: each
+    physical page's cost is split over its holders and sums back to one);
+  * freeing an already-free page always raises, never corrupts the freelist.
+
+Runs under the tests/_hyp.py shim: with hypothesis installed this fuzzes
+many seeds, without it the ``seed=0`` trace still runs as a deterministic
+smoke test (the trace itself is numpy-seeded, so one example is still ~200
+random operations).
+
+Also holds the deterministic regressions for the owner-tag release bug: a
+preempted slot releasing a page another slot still references must DECREF
+it, not free it — the pre-refcount pool freed shared pages out from under
+their sharers.
+"""
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.serving.kv_pool import BlockTables, KVBlockPool
+
+from tests._hyp import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# Deterministic regressions: CoW-aware release / share / fork semantics
+# ---------------------------------------------------------------------------
+
+
+class TestSharedReleaseRegression:
+    def test_release_decrefs_shared_page_instead_of_freeing(self):
+        """Regression: slot 1 shares slot 0's page; preempting slot 0 must
+        NOT free the page — slot 1 still reads it.  The old owner-tagged
+        release assumed exclusive ownership and yanked it."""
+        pool = KVBlockPool(4, 8)
+        (page,) = pool.alloc(1, owner=0)
+        pool.share([page], owner=1)
+        assert pool.refcount(page) == 2
+        freed = pool.release(0)  # slot 0 preempted
+        assert freed == []  # decref only — nothing actually freed
+        assert pool.refcount(page) == 1
+        assert pool.free_count == 3  # page still live for slot 1
+        assert pool.owned_by(1) == [page]
+        # slot 1's own departure is what frees it
+        assert pool.release(1) == [page]
+        assert pool.free_count == 4
+
+    def test_release_mixes_exclusive_and_shared(self):
+        pool = KVBlockPool(8, 4)
+        shared = pool.alloc(2, owner=0)
+        private = pool.alloc(3, owner=0)
+        pool.share(shared, owner=1)
+        freed = pool.release(0)
+        # exclusive pages freed, shared pages only decrefed
+        assert sorted(freed) == sorted(private)
+        assert all(pool.refcount(p) == 1 for p in shared)
+        assert pool.free_count == 8 - len(shared)
+
+    def test_free_of_shared_page_raises(self):
+        pool = KVBlockPool(4, 8)
+        (page,) = pool.alloc(1, owner=0)
+        pool.share([page], owner=1)
+        with pytest.raises(ValueError, match="still referenced"):
+            pool.free([page])
+        pool.check()
+
+    def test_share_free_page_or_double_share_raises(self):
+        pool = KVBlockPool(4, 8)
+        (page,) = pool.alloc(1, owner=0)
+        with pytest.raises(ValueError, match="free page"):
+            pool.share([2], owner=1)
+        with pytest.raises(ValueError, match="already holds"):
+            pool.share([page], owner=0)
+        pool.check()
+
+    def test_fork_gives_private_page_and_keeps_sharers(self):
+        pool = KVBlockPool(4, 8)
+        (page,) = pool.alloc(1, owner=0)
+        pool.share([page], owner=1)
+        new = pool.fork(page, owner=1)
+        assert new is not None and new != page
+        assert pool.refcount(page) == 1 and 0 in pool._holders[page]
+        assert pool.refcount(new) == 1 and pool.owned_by(1) == [new]
+        pool.check()
+
+    def test_fork_on_dry_pool_returns_none(self):
+        pool = KVBlockPool(2, 8)
+        (page,) = pool.alloc(1, owner=0)
+        pool.share([page], owner=1)
+        pool.alloc(1, owner=2)  # pool now dry
+        assert pool.fork(page, owner=1) is None
+        assert pool.refcount(page) == 2  # failed fork left the ref intact
+        pool.check()
+
+    def test_shared_count_counts_physical_pages_once(self):
+        pool = KVBlockPool(6, 4)
+        pages = pool.alloc(3, owner=0)
+        assert pool.shared_count == 0
+        pool.share(pages[:2], owner=1)
+        pool.share(pages[:1], owner=2)
+        assert pool.shared_count == 2
+        assert pool.used_count == 3  # occupancy counts shared pages once
+
+
+class TestBlockTableSharing:
+    def test_copy_row_and_set_entry(self):
+        bt = BlockTables(2, 4)
+        bt.append(0, [5, 3, 7])
+        bt.copy_row(1, 0)
+        assert list(bt.row(1)[:3]) == [5, 3, 7]
+        bt.set_entry(1, 2, 9)  # CoW divergence at the boundary page
+        assert list(bt.row(0)[:3]) == [5, 3, 7]
+        assert list(bt.row(1)[:3]) == [5, 3, 9]
+        with pytest.raises(ValueError, match="unmapped"):
+            bt.set_entry(1, 3, 2)
+
+
+# ---------------------------------------------------------------------------
+# Property fuzz: random operation traces vs a shadow model
+# ---------------------------------------------------------------------------
+
+
+class _Shadow:
+    """Reference model: page -> set of holders."""
+
+    def __init__(self, n_pages):
+        self.n_pages = n_pages
+        self.holders = {}  # page -> set(owners); absent = free
+
+    @property
+    def free(self):
+        return [p for p in range(self.n_pages) if p not in self.holders]
+
+    def live_for(self, owner):
+        return [p for p, h in self.holders.items() if owner in h]
+
+
+def _assert_matches(pool: KVBlockPool, shadow: _Shadow):
+    pool.check()
+    assert pool.free_count == len(shadow.free)
+    assert pool.used_count == shadow.n_pages - len(shadow.free)
+    assert pool.free_count + pool.used_count == pool.n_pages
+    # exact share accounting: every (page, holder) reference costs 1/refs of
+    # a page; the fractions must sum back to the physical page count
+    total = Fraction(0)
+    for p, holders in shadow.holders.items():
+        assert pool.refcount(p) == len(holders) >= 1
+        for _ in holders:
+            total += Fraction(1, len(holders))
+    assert total == pool.used_count
+    assert pool.shared_count == sum(1 for h in shadow.holders.values() if len(h) > 1)
+    for owner in range(8):
+        assert sorted(pool.owned_by(owner)) == sorted(shadow.live_for(owner))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_pool_random_trace_invariants(seed):
+    rng = np.random.default_rng(seed)
+    n_pages = int(rng.integers(2, 12))
+    pool = KVBlockPool(n_pages, page_size=int(rng.integers(1, 16)))
+    shadow = _Shadow(n_pages)
+    owners = list(range(int(rng.integers(2, 8))))
+
+    for _ in range(200):
+        op = rng.choice(["alloc", "share", "fork", "drop", "release", "free",
+                         "double_free"])
+        owner = int(rng.choice(owners))
+        if op == "alloc":
+            n = int(rng.integers(0, n_pages + 2))
+            got = pool.alloc(n, owner)
+            if n > len(shadow.free):
+                assert got is None, "alloc must be all-or-nothing"
+            else:
+                assert got is not None and len(got) == n
+                assert len(set(got)) == n
+                for p in got:
+                    assert p not in shadow.holders
+                    shadow.holders[p] = {owner}
+        elif op == "share":
+            candidates = [p for p, h in shadow.holders.items() if owner not in h]
+            if candidates:
+                k = int(rng.integers(1, len(candidates) + 1))
+                pages = list(rng.choice(candidates, size=k, replace=False))
+                pool.share(pages, owner)
+                for p in pages:
+                    shadow.holders[int(p)].add(owner)
+        elif op == "fork":
+            held = shadow.live_for(owner)
+            if held:
+                p = int(rng.choice(held))
+                new = pool.fork(p, owner)
+                if not shadow.free:
+                    assert new is None, "fork with a dry pool must refuse"
+                else:
+                    assert new is not None and new in shadow.free
+                    shadow.holders[new] = {owner}
+                    shadow.holders[p].discard(owner)
+                    if not shadow.holders[p]:
+                        del shadow.holders[p]
+        elif op == "drop":
+            held = shadow.live_for(owner)
+            if held:
+                p = int(rng.choice(held))
+                was_last = len(shadow.holders[p]) == 1
+                assert pool.drop(p, owner) == was_last
+                shadow.holders[p].discard(owner)
+                if not shadow.holders[p]:
+                    del shadow.holders[p]
+        elif op == "release":  # completion / preemption of a whole slot
+            held = set(shadow.live_for(owner))
+            expect_freed = {p for p in held if len(shadow.holders[p]) == 1}
+            freed = pool.release(owner)
+            assert set(freed) == expect_freed, "release must free only refs==1 pages"
+            for p in held:
+                shadow.holders[p].discard(owner)
+                if not shadow.holders[p]:
+                    del shadow.holders[p]
+        elif op == "free":
+            exclusive = [p for p, h in shadow.holders.items() if len(h) == 1]
+            if exclusive:
+                p = int(rng.choice(exclusive))
+                pool.free([p])
+                del shadow.holders[p]
+        elif op == "double_free":
+            if shadow.free:
+                p = int(rng.choice(shadow.free))
+                with pytest.raises(ValueError, match="double free"):
+                    pool.free([p])
+                with pytest.raises(ValueError, match="double free"):
+                    pool.drop(p, owner)
+        _assert_matches(pool, shadow)
+
+    # drain: releasing every owner empties the pool completely
+    for owner in owners:
+        pool.release(owner)
+        shadow_holders = dict(shadow.holders)
+        for p, h in shadow_holders.items():
+            h.discard(owner)
+            if not h:
+                del shadow.holders[p]
+    assert pool.free_count == n_pages
+    _assert_matches(pool, shadow)

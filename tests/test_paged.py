@@ -223,29 +223,42 @@ def _serve(cfg, params, prompts, n_new, **kw):
 
 
 class TestPagedEngine:
+    @pytest.mark.parametrize("prefix", [False, True])
     @pytest.mark.parametrize("kv_bits", [0, 8])
-    def test_matches_contiguous_greedy(self, setup, kv_bits):
+    def test_matches_contiguous_greedy(self, setup, kv_bits, prefix):
         """Acceptance: identical greedy tokens, paged vs contiguous, fp and
-        int8 KV."""
+        int8 KV — and unchanged when prefix sharing rides along (prompts 1/3
+        share a full page, exercising the CoW path against the contiguous
+        oracle too)."""
         cfg, params = setup
-        prompts = [[1, 2, 3, 4], [9, 8, 7], [5, 5, 5, 5, 5]]
-        want, _ = _serve(cfg, params, prompts, 5, slots=2, capacity=32,
+        # 3 slots: prompts 1 and 3 are in flight together, so the shared
+        # [1,2,3,4] page is still live (and indexed) at prompt 3's admission
+        prompts = [[1, 2, 3, 4], [9, 8, 7], [1, 2, 3, 4, 5]]
+        want, _ = _serve(cfg, params, prompts, 5, slots=3, capacity=32,
                          kv_cache_bits=kv_bits)
-        got, eng = _serve(cfg, params, prompts, 5, slots=2, capacity=32,
-                          kv_cache_bits=kv_bits, paged=True, page_size=4, n_pages=16)
+        got, eng = _serve(cfg, params, prompts, 5, slots=3, capacity=32,
+                          kv_cache_bits=kv_bits, paged=True, page_size=4,
+                          n_pages=24, prefix_sharing=prefix)
         assert got == want, (got, want)
         assert eng.pool.free_count == eng.n_pages  # everything returned
+        if prefix:
+            assert eng.prefix_hits >= 1  # [1,2,3,4] page re-used by prompt 3
 
-    def test_window_arch_mixes_rings_and_pages(self):
+    @pytest.mark.parametrize("prefix", [False, True])
+    def test_window_arch_mixes_rings_and_pages(self, prefix):
         """Sliding-window layers keep per-slot rings while global layers
-        page — parity must hold on a local+global arch (gemma3)."""
+        page — parity must hold on a local+global arch (gemma3), with and
+        without prefix sharing of the global-layer pages."""
         cfg = make_reduced(all_configs()["gemma3-27b"])  # window 8 reduced
         params = init_params(cfg, jax.random.PRNGKey(0))
-        prompts = [[1, 2, 3, 4, 5, 6], [9, 8, 7]]
-        want, _ = _serve(cfg, params, prompts, 6, slots=2, capacity=24)
-        got, _ = _serve(cfg, params, prompts, 6, slots=2, capacity=24,
-                        paged=True, page_size=4, n_pages=12)
+        prompts = [[1, 2, 3, 4, 5, 6], [9, 8, 7], [1, 2, 3, 4, 9]]
+        want, _ = _serve(cfg, params, prompts, 6, slots=3, capacity=24)
+        got, eng = _serve(cfg, params, prompts, 6, slots=3, capacity=24,
+                          paged=True, page_size=4, n_pages=18,
+                          prefix_sharing=prefix)
         assert got == want, (got, want)
+        if prefix:
+            assert eng.prefix_hits >= 1
 
     def test_fragmentation_many_short_one_long(self, setup):
         """The paged pool serves many short requests plus one long one from
