@@ -1,4 +1,4 @@
-.PHONY: test test-quant test-paged test-prefix test-dist bench-quant bench-kv bench-paged bench-prefix
+.PHONY: test test-quant test-paged test-prefix test-chunked test-dist bench-quant bench-kv bench-paged bench-prefix bench-chunked
 
 test:
 	sh scripts/ci.sh
@@ -11,6 +11,9 @@ test-paged:
 
 test-prefix:
 	PYTHONPATH=src python -m pytest -q tests/test_kv_pool_prop.py tests/test_prefix.py
+
+test-chunked:
+	PYTHONPATH=src python -m pytest -q tests/test_chunked.py
 
 test-dist:
 	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -27,3 +30,6 @@ bench-paged:
 
 bench-prefix:
 	PYTHONPATH=src python -m benchmarks.run prefix
+
+bench-chunked:
+	PYTHONPATH=src python -m benchmarks.run chunked_prefill

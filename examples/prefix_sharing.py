@@ -3,14 +3,23 @@
 Serving traffic that repeats a system prompt (here: every request opens
 with the same 32-token preamble) stores the preamble's KV pages ONCE: each
 admission looks the preamble up in the radix prefix index, points its block
-table at the existing physical pages (refcounted), and prefills only its
+table at the existing physical pages (refcounted), and handles only its
 unique tail.  Parallel sampling goes further — n samples of one prompt
 share ALL its pages and diverge lazily, each copy-on-writing the boundary
 page right before its first divergent append.
 
-Greedy outputs are token-identical to the unshared paged engine (the decode
-read path never changes — tables just point at shared pages); the win is
-physical pages, i.e. concurrent sequences per GiB of cache.
+Two flavors of the win are shown:
+
+  * **pages** (exact-parity mode): with ``prefill_mode="scatter"`` the
+    shared prefix is recomputed (its page writes trash-routed), so greedy
+    outputs are bit-for-bit identical to the unshared engine while the
+    preamble's pages are stored once.
+  * **pages + prefill FLOPs** (default chunked mode): the admission starts
+    its first chunk AFTER the shared pages and reads them in place — the
+    preamble is never recomputed.  The reused K/V is byte-identical, but
+    attention now sums it in block-table order instead of in-flight order,
+    so greedy outputs match the recompute path only up to floating-point
+    reduction order (tests/test_chunked.py pins the strict oracle parity).
 
   PYTHONPATH=src python examples/prefix_sharing.py
 """
@@ -37,10 +46,12 @@ def main() -> None:
                     max_new_tokens=10)
             for _ in range(6)]
 
+    # -- pages win, exact parity (scatter mode recomputes the prefix) ------
     outs = {}
     for sharing in (False, True):
         eng = ContinuousEngine(cfg, params, slots=6, capacity=96, paged=True,
-                               page_size=16, n_pages=30, prefix_sharing=sharing)
+                               page_size=16, n_pages=30, prefix_sharing=sharing,
+                               prefill_mode="scatter")
         ids = [eng.submit(r) for r in reqs]
         done = eng.run_until_done()
         outs[sharing] = [done[i].tokens for i in ids]
@@ -50,7 +61,24 @@ def main() -> None:
                  f"cow_copies={eng.cow_copies}") if sharing else ""
         print(f"{tag:>20}: peak live pages {peak_used}/{eng.n_pages}{extra}")
     assert outs[False] == outs[True], "sharing must not change greedy outputs"
-    print("greedy outputs token-identical with and without sharing")
+    print("greedy outputs token-identical with and without sharing (scatter oracle)")
+
+    # -- FLOPs win on top (default chunked mode reads the prefix in place) -
+    toks = {}
+    for sharing in (False, True):
+        eng = ContinuousEngine(cfg, params, slots=6, capacity=96, paged=True,
+                               page_size=16, n_pages=30, prefix_sharing=sharing)
+        first = eng.submit(reqs[0])
+        while any(s.active and s.prefilling for s in eng.slots):
+            eng.step()  # let the preamble's pages land (and be indexed)
+        for r in reqs[1:]:
+            eng.submit(r)
+        eng.run_until_done()
+        toks[sharing] = (eng.prefill_tokens_total, eng.prefill_tokens_skipped)
+    (total_ns, _), (total_s, skipped) = toks[False], toks[True]
+    print(f"chunked prefill: {total_ns} prompt tokens computed without sharing, "
+          f"{total_s} with ({skipped} skipped = {skipped / total_ns:.0%} of "
+          f"prefill FLOPs saved)")
 
     # parallel sampling: 4 greedy samples off one prompt = one set of pages
     eng = ContinuousEngine(cfg, params, slots=4, capacity=96, paged=True,

@@ -20,6 +20,12 @@ python -m pytest -q tests/test_paged.py
 # parity vs the non-prefix engine, and the randomized scheduler fuzz
 python -m pytest -q tests/test_kv_pool_prop.py tests/test_prefix.py
 
+# chunked-prefill stage: prefill-chunk kernel vs ref, chunked-vs-scatter
+# greedy parity (fp/int8, ring mixes, prefix sharing), chunk-boundary sweep,
+# and the resumable admission state machine (bounded decode stalls,
+# mid-prefill preemption, fork wait, progressive prefix registration)
+python -m pytest -q tests/test_chunked.py
+
 python -m pytest -x -q --ignore=tests/test_dist.py
 
 # dist tier (jax-compat shim in parallel/compat.py + the dense-dispatch

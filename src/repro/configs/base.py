@@ -151,12 +151,25 @@ class PagedKVConfig:
                ``--n-samples``) share ALL prompt pages, diverging via
                copy-on-write.  Greedy outputs are token-identical to the
                non-shared paged engine; the win is pages — a prefix shared by
-               N sequences costs 1/N of the pages per sequence.
+               N sequences costs 1/N of the pages per sequence.  Under
+               chunked prefill the shared prefix's K/V is also read in place
+               instead of recomputed, so sharing saves prefill FLOPs too
+               (saved fraction = prefix_len / prompt_len).
+    prefill_chunk: tokens of admission-prefill compute per engine tick
+               (chunked prefill-into-pages; 0 = auto: max(64, page_size)).
+               Admission still reserves all the prompt's pages up front
+               (all-or-nothing, free-block admission unchanged), but the
+               compute is spread one page-aligned chunk per ``step()``,
+               interleaved with decode — a long prompt can never stall
+               running decodes for more than one chunk of compute, and the
+               temp contiguous prefill buffer of the old scatter path is
+               gone.  Must be >= page_size.
     """
 
     page_size: int = 16
     n_pages: int = 0
     prefix_sharing: bool = False
+    prefill_chunk: int = 0
 
 
 @dataclass(frozen=True)

@@ -77,7 +77,10 @@ def _paged_kernel(table_ref, *refs, scale, causal, window, softcap, nt, ps, quan
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])  # [G, ps]
+    # Zero masked entries explicitly: on a fully-masked tile seen before any
+    # valid key the running max is still NEG_INF, and exp(NEG_INF - NEG_INF)
+    # == 1 would count every masked key into the normalizer.
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)  # [G, ps]
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
     v = vq_ref[...].reshape(ps, dh).astype(jnp.float32)
     if quantized:
@@ -113,7 +116,21 @@ def paged_decode_attention(
     softcap: float = 0.0,
     interpret: bool = True,
 ) -> jax.Array:
-    """Returns [B, Hkv, G, dh] attention output in q.dtype."""
+    """Returns [B, Hkv, G, dh] attention output in q.dtype.
+
+    Caller contract (``tests/test_paged.py::TestPagedKernel`` checks the
+    masking consequences against the einsum ref):
+
+      * ``table`` is pre-clamped — -1 (unmapped) entries replaced by the
+        trash page id ``Pt - 1``, whose ``kpos`` row is pinned at -1 so it
+        contributes nothing;
+      * ``kpos`` is -1 for every never/no-longer-valid pool entry (freshly
+        allocated and recycled pages are invalidated by
+        ``models.model.paged_reset_pages`` — a stale position <= the query's
+        would otherwise unmask the previous occupant's K/V);
+      * fully masked tiles are explicitly zeroed out of the normalizer, so
+        trash-only rows (inactive slots) return garbage-but-finite output
+        that the scheduler discards."""
     B, Hkv, G, dh = q.shape
     ps = kq.shape[1]
     nt = table.shape[1]

@@ -1,0 +1,250 @@
+"""Chunked prefill attention over a paged KV pool (TPU Pallas, validated in
+interpret mode): a page-aligned *chunk* of prompt queries attends causally to
+
+  1. every page the sequence has already written — earlier prefill chunks
+     plus any prefix pages SHARED from other sequences — gathered through the
+     scalar-prefetched block table, exactly like the decode kernel
+     (kernels/attention_paged.py), and
+  2. the chunk's own in-flight K/V, still full precision, with the causal
+     mask applied inside the chunk.
+
+This is the kernel that removes the temp-contiguous-then-scatter admission
+path: the scheduler maps the prompt's pages up front, each chunk's K/V is
+written straight into its destination pages after this kernel reads the
+*pre-write* pool, and a prefix-sharing admission starts its first chunk at
+``shared_len`` — the shared pages are read in place, never recomputed, so
+sharing saves the prefill FLOPs as well as the pages.
+
+Composes with the int8 KV cache the same way decode does: quantized pages
+are widened and rescaled by their per-(timestep, head) f32 scales in VMEM
+right before the dot.  The chunk's own K/V arrives unquantized (it has not
+been written yet), so intra-chunk attention is always full precision.
+
+Grid is (kv-head, table entry + 1): the page axis is innermost (sequential
+on TPU) with the online-softmax running max / normalizer / accumulator in
+VMEM scratch, flash-attention style; the extra final step processes the
+in-flight chunk tile.  Unlike decode, a prefill chunk routinely sees *fully
+masked* tiles before any valid key (the pool is empty on the first chunk of
+an unshared admission), so the probability tile is explicitly zeroed where
+masked — ``exp(NEG_INF - NEG_INF) == 1`` would otherwise pollute the
+normalizer while the running max is still at its initial value.
+
+Invariants the wrapper relies on (enforced by tests/test_chunked.py):
+
+  * ``table`` is pre-clamped (-1 -> trash page, whose ``pos`` is pinned -1);
+  * pages of not-yet-written positions carry ``pos == -1`` (freshly
+    allocated or recycled via ``paged_reset_pages``), so causal masking
+    falls out of the pool's position array with no extra bookkeeping;
+  * pool keys at positions >= the chunk start are masked in-kernel: they can
+    only be shared-prefix pages being *recomputed* (archs whose window-ring
+    or SSM/LRU per-slot state forces the prefix compute) — those positions
+    are in flight in the chunk tile, and each key is counted exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _soft_cap(s, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(s / cap) * cap
+    return s
+
+
+def _prefill_kernel(table_ref, *refs, scale, causal, window, softcap, nt, ps, quantized):
+    """Grid (Hkv, nt + 1); steps 0..nt-1 stream pool pages via the prefetched
+    table, step nt processes the chunk's in-flight K/V and finalizes."""
+    if quantized:
+        (q_ref, qpos_ref, kq_ref, ks_ref, vq_ref, vs_ref, kpos_ref,
+         ck_ref, cv_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, qpos_ref, kq_ref, vq_ref, kpos_ref,
+         ck_ref, cv_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    C, G, dh = q_ref.shape[0], q_ref.shape[-2], q_ref.shape[-1]
+    q = q_ref[...].reshape(C * G, dh).astype(jnp.float32)
+    # per-query positions, expanded over the G grouped heads (c-major rows)
+    qp = jnp.broadcast_to(
+        qpos_ref[...].reshape(C, 1, 1), (C, G, 1)
+    ).reshape(C * G, 1).astype(jnp.int32)
+
+    def update(k, v, kp):
+        """Online-softmax update with one key tile.  k/v: [T, dh] f32;
+        kp: [1, T] absolute positions (-1 = empty)."""
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [CG, T]
+        s = _soft_cap(s, softcap)
+        valid = kp >= 0
+        if causal:
+            valid = valid & (kp <= qp)
+        if window > 0:
+            valid = valid & (qp - kp < window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        # Zero masked entries explicitly: while no valid key has been seen
+        # the running max is still NEG_INF and exp(NEG_INF - NEG_INF) == 1
+        # would count every masked key into the normalizer.
+        p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(it < nt)
+    def _page_tile():
+        k = kq_ref[...].reshape(ps, dh).astype(jnp.float32)
+        v = vq_ref[...].reshape(ps, dh).astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[...].reshape(ps, 1)  # dequantize the page in VMEM
+            v = v * vs_ref[...].reshape(ps, 1)
+        # pool history is STRICTLY pre-chunk: when a shared-prefix admission
+        # recomputes the prefix (rebuilding window-ring/SSM state), those
+        # positions are live in shared pages AND in flight — mask the pool
+        # copy so each key is counted exactly once
+        kp = kpos_ref[...].reshape(1, ps)
+        kp = jnp.where(kp >= qpos_ref[0, 0], -1, kp)
+        update(k, v, kp)
+
+    @pl.when(it == nt)
+    def _chunk_tile_and_finalize():
+        k = ck_ref[...].reshape(C, dh).astype(jnp.float32)
+        v = cv_ref[...].reshape(C, dh).astype(jnp.float32)
+        # the chunk's keys sit at the query positions themselves
+        update(k, v, qpos_ref[...].reshape(1, C).astype(jnp.int32))
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "softcap", "interpret"),
+)
+def paged_prefill_attention(
+    q: jax.Array,      # [C, Hkv, G, dh] — one chunk of prompt queries
+    kq: jax.Array,     # [Pt, ps, Hkv, dh] page pool (int8 if quantized, else fp)
+    ks,                # [Pt, ps, Hkv, 1] f32 scales, or None (fp pool)
+    vq: jax.Array,     # [Pt, ps, Hkv, dh]
+    vs,                # [Pt, ps, Hkv, 1] or None
+    kpos: jax.Array,   # [Pt, ps] int32 — absolute position per pool entry, -1 empty
+    table: jax.Array,  # [nt] int32 — the slot's page ids; pre-clamped: -1 -> Pt-1
+    qpos: jax.Array,   # [C] int32 — the chunk tokens' absolute positions
+    ck: jax.Array,     # [C, Hkv, dh] — the chunk's in-flight (fp) keys
+    cv: jax.Array,     # [C, Hkv, dh] — the chunk's in-flight (fp) values
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns [C, Hkv, G, dh] attention output in q.dtype."""
+    C, Hkv, G, dh = q.shape
+    Pt, ps = kq.shape[0], kq.shape[1]
+    nt = table.shape[0]
+    quantized = ks is not None
+    # pad the prefetched table with one trash entry so the chunk step's page
+    # index maps stay in range (their DMA result is unused)
+    tbl = jnp.concatenate(
+        [table.astype(jnp.int32), jnp.full((1,), Pt - 1, jnp.int32)]
+    )
+    qpos2 = qpos.reshape(C, 1).astype(jnp.int32)
+
+    kern = functools.partial(
+        _prefill_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        nt=nt, ps=ps, quantized=quantized,
+    )
+    page = lambda h, t, tref: (tref[t], 0, h, 0)
+    in_specs = [
+        pl.BlockSpec((C, 1, G, dh), lambda h, t, tref: (0, h, 0, 0)),   # q
+        pl.BlockSpec((C, 1), lambda h, t, tref: (0, 0)),                # qpos
+        pl.BlockSpec((1, ps, 1, dh), page),                             # k page
+    ]
+    args = [q, qpos2, kq]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, ps, 1, 1), page))              # k scales
+        args.append(ks)
+    in_specs.append(pl.BlockSpec((1, ps, 1, dh), page))                 # v page
+    args.append(vq)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, ps, 1, 1), page))              # v scales
+        args.append(vs)
+    in_specs.append(pl.BlockSpec((1, ps), lambda h, t, tref: (tref[t], 0)))  # pos
+    args.append(kpos)
+    in_specs.append(pl.BlockSpec((C, 1, dh), lambda h, t, tref: (0, h, 0)))  # ck
+    args.append(ck)
+    in_specs.append(pl.BlockSpec((C, 1, dh), lambda h, t, tref: (0, h, 0)))  # cv
+    args.append(cv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Hkv, nt + 1),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((C, 1, G, dh), lambda h, t, tref: (0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C * G,), jnp.float32),      # running max
+            pltpu.VMEM((C * G,), jnp.float32),      # running normalizer
+            pltpu.VMEM((C * G, dh), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((C, Hkv, G, dh), q.dtype),
+        interpret=interpret,
+    )(tbl, *args)
+
+
+def paged_prefill_attention_ref(
+    q, kq, ks, vq, vs, kpos, table, qpos, ck, cv,
+    *, scale, causal=True, window=0, softcap=0.0,
+):
+    """Pure-jnp oracle: gather the mapped pages into a contiguous history,
+    append the chunk's in-flight K/V, masked f32 softmax over the union."""
+    C, Hkv, G, dh = q.shape
+    ps = kq.shape[1]
+
+    def gather(pool):  # [Pt, ps, ...] -> [nt*ps, ...]
+        g = pool[table]  # table pre-clamped: -1 -> trash page
+        return g.reshape((table.shape[0] * ps,) + g.shape[2:])
+
+    k = gather(kq).astype(jnp.float32)
+    v = gather(vq).astype(jnp.float32)
+    if ks is not None:
+        k = k * gather(ks)
+        v = v * gather(vs)
+    k = jnp.concatenate([k, ck.astype(jnp.float32)], axis=0)  # [T, Hkv, dh]
+    v = jnp.concatenate([v, cv.astype(jnp.float32)], axis=0)
+    hist = gather(kpos)
+    hist = jnp.where(hist >= qpos[0], -1, hist)  # pool = strictly pre-chunk
+    kp = jnp.concatenate([hist, qpos.astype(jnp.int32)])  # [T]
+
+    s = jnp.einsum("chgd,thd->hgct", q.astype(jnp.float32), k) * scale
+    s = _soft_cap(s, softcap)
+    qp = qpos.astype(jnp.int32)[:, None]  # [C, 1]
+    valid = kp[None, :] >= 0
+    if causal:
+        valid = valid & (kp[None, :] <= qp)
+    if window > 0:
+        valid = valid & (qp - kp[None, :] < window)
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hgct,thd->chgd", p, v)
+    return out.astype(q.dtype)

@@ -61,3 +61,20 @@ def fused_decode_attention_paged(q, kq, ks, vq, vs, kpos, table, qpos, *, scale,
         scale=scale, causal=causal, window=window, softcap=softcap,
         interpret=_interpret(),
     )
+
+
+def fused_prefill_attention_paged(q, kq, ks, vq, vs, kpos, table, qpos, ck, cv,
+                                  *, scale, causal, window, softcap):
+    """Chunked-prefill attention over a paged KV pool: one chunk of prompt
+    queries attends to the sequence's already-written pages (earlier chunks,
+    shared prefix pages) via the scalar-prefetched block table PLUS its own
+    in-flight fp K/V (kernels/attention_prefill_paged.py).  ``table`` must be
+    pre-clamped (-1 entries -> trash page); the pool must be pre-write (the
+    chunk's own positions still carry ``pos == -1``)."""
+    from repro.kernels.attention_prefill_paged import paged_prefill_attention
+
+    return paged_prefill_attention(
+        q, kq, ks, vq, vs, kpos, table, qpos, ck, cv,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        interpret=_interpret(),
+    )

@@ -64,6 +64,13 @@ def main() -> None:
                          "slots * ceil(capacity / page_size), no oversubscription)")
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots for --paged (default: --batch)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="with --paged: admission-prefill tokens per engine "
+                         "tick (chunked prefill-into-pages; 0 = auto: "
+                         "max(64, page_size)).  Long prompts prefill one "
+                         "page-aligned chunk per tick interleaved with "
+                         "decode, bounding time-to-first-token head-of-line "
+                         "blocking; must be >= --page-size")
     ap.add_argument("--prefix-sharing", action="store_true",
                     help="with --paged: refcounted copy-on-write page sharing "
                          "— contexts repeating an indexed full-page prefix "
@@ -76,6 +83,11 @@ def main() -> None:
     args = ap.parse_args()
     if args.prefix_sharing and not args.paged:
         ap.error("--prefix-sharing requires --paged (block tables)")
+    if args.prefill_chunk and not args.paged:
+        ap.error("--prefill-chunk applies to the paged admission path; pass --paged")
+    if args.prefill_chunk and args.prefill_chunk < args.page_size:
+        ap.error(f"--prefill-chunk {args.prefill_chunk} must be >= --page-size "
+                 f"{args.page_size} (chunk boundaries are page-aligned)")
     if args.n_samples > 1 and not args.paged:
         ap.error("--n-samples > 1 is served by the paged continuous engine; "
                  "pass --paged")
@@ -145,6 +157,7 @@ def main() -> None:
         page_size=args.page_size if args.paged else 0,
         n_pages=args.pages,
         prefix_sharing=args.prefix_sharing,
+        prefill_chunk=args.prefill_chunk,
     )
     eng = None if args.paged else Engine(cfg, params, ec)
     if args.kv_bits and eng is not None:
@@ -179,7 +192,8 @@ def main() -> None:
         # the page knobs ride on EngineConfig (built above) and are handed to
         # the continuous engine as a PagedKVConfig bundle
         pcfg = PagedKVConfig(page_size=ec.page_size, n_pages=ec.n_pages,
-                             prefix_sharing=args.prefix_sharing)
+                             prefix_sharing=args.prefix_sharing,
+                             prefill_chunk=ec.prefill_chunk)
         slots = args.slots or args.batch
         capacity = args.prompt_len + args.new_tokens
         ceng = ContinuousEngine(
@@ -201,6 +215,8 @@ def main() -> None:
         ceng.run_until_done()
         ceng.done.clear()
         ceng.preemptions = 0
+        ceng.prefill_tokens_total = 0
+        ceng.prefill_tokens_skipped = 0
         ceng.metrics_log.clear()
         t0 = time.time()
         if args.n_samples > 1:
@@ -221,6 +237,15 @@ def main() -> None:
             print(f"prefix sharing: hits={ceng.prefix_hits}, "
                   f"shared_tokens={ceng.prefix_hit_tokens}, "
                   f"peak_shared_pages={peak_shared}, cow_copies={ceng.cow_copies}")
+        if ceng.prefill_mode == "chunked":
+            pf = [r.get("prefill_tokens", 0) for r in ceng.metrics_log]
+            dc = [r.get("tokens_this_tick", 0) for r in ceng.metrics_log]
+            print(f"chunked prefill: chunk={ceng.prefill_chunk} tok/tick, "
+                  f"prefill_tokens={ceng.prefill_tokens_total} "
+                  f"(skipped_shared={ceng.prefill_tokens_skipped}), "
+                  f"per_tick prefill/decode = {sum(pf)}/{sum(dc)} "
+                  f"(peak prefill/tick={max(pf, default=0)}, "
+                  f"peak decode/tick={max(dc, default=0)})")
         print("last tick metrics:", m)
         print("sample:", done[ids[0]].tokens[:10])
         return

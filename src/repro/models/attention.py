@@ -271,6 +271,111 @@ def _paged_gather(pool, table):
     return g.reshape((table.shape[0], table.shape[1] * pool.shape[1]) + g.shape[3:])
 
 
+def _paged_cache_write_chunk(cache: dict, k_new, v_new, positions, table_row) -> dict:
+    """Write one prefill chunk's K/V (a single sequence, C tokens) straight
+    into its block-table pages — the direct-write half of chunked prefill.
+    ``positions`` [C] are consecutive, so every (page, offset) target is
+    distinct; unmapped entries (never produced by a correct scheduler, which
+    pre-allocates the prompt's pages at admission) clamp to the trash page
+    with a -1 position.  Quantized pools quantize on write, same as decode.
+
+    SHARED prefix pages are never written, with no extra plumbing: a chunk
+    position whose destination entry already holds that exact position can
+    only be a prefix page shared from another admission (fresh and recycled
+    pages carry ``pos == -1``, and a chunk never revisits its own earlier
+    positions), so its write is routed to the trash page.  This arises when
+    an arch with non-paged sequential state (window rings, SSM/LRU) must
+    recompute the shared prefix to rebuild that state — the refcount>1 page
+    stays bit-identical, which tests/test_prefix.py asserts."""
+    Pt, ps = cache["pos"].shape
+    pos = positions.astype(jnp.int32)  # [C]
+    entry = pos // ps
+    offs = pos % ps
+    pages = _paged_clamp_table(table_row[entry], Pt)
+    already = cache["pos"][pages, offs] == pos  # shared-prefix entries
+    pages = jnp.where(already, Pt - 1, pages)
+    write = lambda buf, vals: buf.at[pages, offs].set(vals[0])
+    k = _write_kv(cache["k"], k_new, write)
+    v = _write_kv(cache["v"], v_new, write)
+    pos_val = jnp.where(pages == Pt - 1, -1, pos)
+    pos_arr = cache["pos"].at[pages, offs].set(pos_val)
+    return {"k": k, "v": v, "pos": pos_arr}
+
+
+def _paged_prefill_chunk_attend(q, k, v, cache: dict, positions, table_row, spec: AttnSpec, scale: float):
+    """Chunk queries attend over (already-written pool pages: earlier chunks
+    + shared prefix, read in place) ++ (the chunk's own in-flight fp K/V,
+    causal).  q/k/v: [1, C, ...]; ``cache`` is the PRE-write pool.  Pool keys
+    at positions >= the chunk start are masked out: when a shared-prefix
+    admission recomputes the prefix (archs with window rings / SSM state),
+    those positions are live in the shared pages AND in flight — the
+    in-flight copy is the single source, counted once."""
+    mode = PAGED_BACKEND[0]
+    if mode is None:
+        mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+    window = spec.window if spec.kind == "local" else 0
+    Pt = cache["pos"].shape[0]
+    tbl = _paged_clamp_table(table_row, Pt)
+    quant = isinstance(cache["k"], QuantizedKV)
+    B, C, H, dh = q.shape
+    Hkv = k.shape[2]
+    if mode == "kernel":
+        from repro.kernels.ops import fused_prefill_attention_paged
+
+        qg = q[0].reshape(C, Hkv, H // Hkv, dh)
+        if quant:
+            args = (cache["k"].q, cache["k"].scale, cache["v"].q, cache["v"].scale)
+        else:
+            args = (cache["k"], None, cache["v"], None)
+        y = fused_prefill_attention_paged(
+            qg, *args, cache["pos"], tbl, positions[0], k[0], v[0],
+            scale=scale, causal=spec.causal, window=window,
+            softcap=spec.logit_softcap,
+        )
+        return y.reshape(1, C, H, dh)
+    tbl2 = tbl[None]  # [1, nt]
+    if quant:
+        kh = materialize_kv(QuantizedKV(
+            _paged_gather(cache["k"].q, tbl2), _paged_gather(cache["k"].scale, tbl2),
+            cache["k"].orig_dtype,
+        ))
+        vh = materialize_kv(QuantizedKV(
+            _paged_gather(cache["v"].q, tbl2), _paged_gather(cache["v"].scale, tbl2),
+            cache["v"].orig_dtype,
+        ))
+    else:
+        kh = _paged_gather(cache["k"], tbl2)
+        vh = _paged_gather(cache["v"], tbl2)
+    kcat = jnp.concatenate([kh.astype(k.dtype), k], axis=1)
+    vcat = jnp.concatenate([vh.astype(v.dtype), v], axis=1)
+    hist_pos = _paged_gather(cache["pos"], tbl2)
+    hist_pos = jnp.where(hist_pos >= positions[0, 0], -1, hist_pos)  # pool = strictly pre-chunk
+    k_pos = jnp.concatenate([hist_pos, positions], axis=1)
+    mask = _window_causal_mask(positions, k_pos, window, spec.causal)
+    return _sdpa(q, kcat, vcat, mask, scale, spec.logit_softcap)
+
+
+def _cache_write_chunk(cache: dict, k, v, positions) -> dict:
+    """Append one prefill chunk into a contiguous/ring cache that already
+    holds earlier chunks (chunked-prefill resume for per-slot window rings).
+    For C <= cap the consecutive positions map to DISTINCT ring slots
+    (``pos % cap``), so a scatter preserves the ring invariant slot ==
+    pos % cap even when the chunk starts mid-ring; for C > cap the ring is
+    rebuilt from the chunk's last ``cap`` tokens — everything older just
+    fell out of the ring, and ``_cache_write_prefill``'s rebuild lays them
+    out at slot == pos % cap too."""
+    cap = cache["k"].shape[1]
+    S = k.shape[1]
+    if S > cap:
+        return _cache_write_prefill(cache, k, v, positions)
+    slots = jnp.mod(positions[0].astype(jnp.int32), cap)  # same for every row
+    write = lambda buf, vals: buf.at[:, slots].set(vals)
+    k_ = _write_kv(cache["k"], k, write)
+    v_ = _write_kv(cache["v"], v, write)
+    pos_ = cache["pos"].at[:, slots].set(positions.astype(jnp.int32))
+    return {"k": k_, "v": v_, "pos": pos_}
+
+
 def _paged_decode_attend(q, cache: dict, row_pos, table, spec: AttnSpec, scale: float):
     """One-token decode over a paged pool.  q: [B, 1, H, dh]."""
     mode = PAGED_BACKEND[0]
@@ -419,6 +524,13 @@ def attention(
     - decode_paged: like decode_ragged, but global-context caches are shared
       page pools addressed through ``block_table`` [B, max_pages] (window
       layers keep their per-slot rings; see ``spec_is_paged``).
+    - prefill_chunk: one page-aligned chunk of a resumable admission prefill
+      (x is [1, C, d], positions are absolute).  Paged layers attend over
+      (already-written pool pages ++ in-flight chunk K/V) and write the chunk
+      STRAIGHT into its block-table pages — no temp contiguous cache; window
+      rings (and any contiguous cache) resume by attending over (cache
+      pre-write ++ chunk) and appending.  The cache must already hold every
+      position below the chunk start (earlier chunks / shared prefix pages).
     - cross (spec.kind == 'cross'): attends to ``memory`` (no cache mutation
       for train; serving caches projected memory K/V once at prefill).
     """
@@ -452,7 +564,7 @@ def attention(
         y = _sdpa(q, k, v, mask, scale, spec.logit_softcap)
         new_cache = (
             {"k": k, "v": v, "pos": jnp.broadcast_to(k_pos, (B, k.shape[1])).astype(jnp.int32)}
-            if mode == "prefill"
+            if mode in ("prefill", "prefill_chunk")  # chunk re-writes: idempotent
             else cache
         )
         out = jnp.einsum("bshe,hed->bsd", y, materialize(params["wo"]))
@@ -477,6 +589,31 @@ def attention(
     cp = _context_parallel_size(cfg)
     if cp > 1 and mode != "decode" and S % cp == 0:
         q = shard_hint(q, "batch", "q_seq", None, None)
+
+    if mode == "prefill_chunk":
+        assert cache is not None
+        pos2d = positions if positions.ndim == 2 else positions[None]
+        pos2d = jnp.broadcast_to(pos2d, (B, S)).astype(jnp.int32)
+        if spec_is_paged(spec) and block_table is not None:
+            # paged layer: attend over the pre-write pool + in-flight chunk,
+            # then write the chunk's K/V straight into its pages
+            table_row = block_table[0] if block_table.ndim == 2 else block_table
+            y = _paged_prefill_chunk_attend(q, k, v, cache, pos2d, table_row, spec, scale)
+            new_cache = _paged_cache_write_chunk(cache, k, v, pos2d[0], table_row)
+        else:
+            # window ring (or contiguous cache) resume: earlier chunks are in
+            # the cache, the current chunk is in flight
+            kcat = jnp.concatenate([materialize_kv(cache["k"]).astype(k.dtype), k], axis=1)
+            vcat = jnp.concatenate([materialize_kv(cache["v"]).astype(v.dtype), v], axis=1)
+            k_pos = jnp.concatenate([cache["pos"], pos2d], axis=1)
+            mask = _window_causal_mask(
+                pos2d, k_pos, spec.window if spec.kind == "local" else 0, spec.causal
+            )
+            y = _sdpa(q, kcat, vcat, mask, scale, spec.logit_softcap)
+            new_cache = _cache_write_chunk(cache, k, v, pos2d)
+        y = shard_hint(y, "batch", "seq", "heads", "head_dim")
+        out = jnp.einsum("bshe,hed->bsd", y, materialize(params["wo"]))
+        return out, new_cache
 
     if mode.startswith("decode"):
         assert cache is not None and S == 1

@@ -278,6 +278,22 @@ def _layer_entries(cfg: ModelConfig):
             yield f"seg{i}", f"pos{j}", ls, paged
 
 
+def arch_fully_paged(cfg: ModelConfig) -> bool:
+    """True iff every sequence-mixing layer's state lives in the shared page
+    pool under paged serving — i.e. no window rings and no SSM/LRU states.
+
+    This is the condition for prefix sharing to skip the shared prefix's
+    *prefill compute* (chunked prefill reads the shared pages in place): any
+    non-paged sequential state must be rebuilt by actually running the
+    prefix, so mixed archs (gemma3 ring mixes, hybrids) still compute it —
+    they keep the page-sharing memory win, write nothing to shared pages
+    (trash-routed), and only fully-paged archs get the FLOPs win too."""
+    for _, _, ls, paged in _layer_entries(cfg):
+        if not paged:
+            return False
+    return True
+
+
 def paged_ragged_decode_step(
     cfg: ModelConfig,
     params: dict,
@@ -387,6 +403,100 @@ def paged_copy_slot_leaves(cfg: ModelConfig, caches: dict, src, dst) -> dict:
     return out
 
 
+def paged_prefill_chunk(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # [1, C] int32 — one page-aligned chunk of the prompt
+    positions: jax.Array,  # [1, C] int32 — absolute positions (chunk start..end-1)
+    slot: jax.Array,  # [] int32 — batch row for the per-slot leaves
+    caches: dict,  # from init_paged_caches
+    table_row: jax.Array,  # [max_pages] int32 — the slot's block table, -1 unmapped
+    *,
+    capacity: int,
+    kv_bits: int = 0,
+    page_size: int,
+    reset: bool = False,  # static: True for an admission's FIRST chunk
+    memory: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """One chunk of a resumable admission prefill, written DIRECTLY into pool
+    pages — the chunked replacement for ``paged_prefill_into_slot``'s
+    temp-contiguous-then-scatter path.  Per chunk:
+
+      * paged self-attention layers attend over (the sequence's
+        already-written pages — earlier chunks AND shared prefix pages, read
+        in place through ``table_row`` — ++ the chunk's in-flight K/V) and
+        write the chunk's K/V straight into its destination pages
+        (models/attention.py ``prefill_chunk`` mode; Pallas kernel in
+        kernels/attention_prefill_paged.py, int8 pools dequantized in VMEM);
+      * per-slot leaves (window rings, SSM/LRU states, cross caches) are
+        sliced out at row ``slot``, advanced by the chunk (rings append at
+        ``pos % cap``; SSM/LRU resume from their carried state), and written
+        back — so the state machine is fully resumable across engine ticks.
+
+    The scheduler must have mapped every page the chunk writes into
+    ``table_row`` before the first chunk, and chunks must be submitted in
+    position order starting at the first non-shared position (a
+    prefix-sharing admission starts AFTER the shared pages, which is what
+    turns page sharing into prefill-FLOPs sharing).  Returns (last-chunk-
+    position logits [1, V], updated caches); only the final chunk's logits
+    seed the first sampled token.
+
+    ``reset=True`` (an admission's FIRST chunk) starts the per-slot leaves
+    from their freshly-initialized values — zero SSM/LRU state, empty conv
+    prefixes, rings with ``pos == -1`` — instead of resuming row ``slot``'s
+    contents: the row still holds the slot's PREVIOUS occupant's state (the
+    scatter path rewrote the whole row implicitly; the chunked state machine
+    must reset explicitly or a reused slot leaks its predecessor's
+    recurrence into the new request's first chunk).  Later chunks resume.
+
+    There is no temp contiguous cache anywhere in this path: peak admission
+    memory is the chunk activations, not a ``capacity``-token double buffer.
+    """
+    x = embed_tokens(cfg, params, tokens)
+
+    def _slice_row(leaf):
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+
+    fresh = (
+        init_paged_caches(cfg, 1, capacity, n_pages=1, page_size=page_size,
+                          kv_bits=kv_bits)
+        if reset else None
+    )  # paged pool leaves of `fresh` are unused (DCE'd); per-slot rows are
+    one = {}
+    for sk, pk, ls, paged in _layer_entries(cfg):
+        c = caches[sk][pk]
+        o = {}
+        for key in c:
+            if key == "self" and paged:
+                o[key] = c[key]  # shared pool — addressed via the table
+            elif reset:
+                o[key] = fresh[sk][pk][key]  # init-valued row (ring pos -1)
+            else:
+                o[key] = jax.tree.map(_slice_row, c[key])
+        one.setdefault(sk, {})[pk] = o
+
+    x, updated, _ = _run_segments(
+        cfg, params, x, positions, one, "prefill_chunk", memory, False,
+        block_table=table_row[None],
+    )
+    logits = logits_out(cfg, params, x[:, -1:])[:, 0]
+
+    def _write_row(pool, row):
+        return jax.lax.dynamic_update_slice_in_dim(pool, row.astype(pool.dtype), slot, axis=1)
+
+    merged = {}
+    for sk, pk, ls, paged in _layer_entries(cfg):
+        c_pool, c_new = caches[sk][pk], updated[sk][pk]
+        o = {}
+        for key in c_pool:
+            if key == "self" and paged:
+                o[key] = c_new[key]  # pool pages were written by the chunk
+            else:
+                o[key] = jax.tree.map(_write_row, c_pool[key], c_new[key])
+        merged.setdefault(sk, {})[pk] = o
+    return logits, merged
+
+
 def paged_prefill_into_slot(
     cfg: ModelConfig,
     params: dict,
@@ -401,22 +511,28 @@ def paged_prefill_into_slot(
     memory: Optional[jax.Array] = None,
     scatter_start=0,  # [] int32 (traced ok) — first position written to pages
 ) -> Tuple[jax.Array, dict]:
-    """Admission prefill for paged serving: run the ordinary contiguous
-    prefill into a temporary single-sequence cache (identical numerics to the
-    non-paged path), then scatter the filled K/V into the slot's block-table
-    pages and dynamic-update the per-slot leaves at ``slot``.  The scheduler
-    must have mapped ``ceil(S / page_size)`` pages into ``table_row``.
+    """One-shot admission prefill via temp-contiguous-then-scatter: run the
+    ordinary contiguous prefill into a temporary single-sequence cache
+    (identical numerics to the non-paged path), then scatter the filled K/V
+    into the slot's block-table pages and dynamic-update the per-slot leaves
+    at ``slot``.  The scheduler must have mapped ``ceil(S / page_size)``
+    pages into ``table_row``.
+
+    This is no longer the default admission path — ``paged_prefill_chunk``
+    writes pages directly, with no temp buffer and no recompute of shared
+    prefixes.  It is retained as the *parity oracle* for chunked prefill
+    (``ContinuousEngine(prefill_mode="scatter")``; tests/test_chunked.py
+    asserts token-identical greedy outputs between the two) and as the
+    reference for the scatter semantics below.
 
     ``scatter_start`` supports prefix sharing: positions below it already
     live in pages SHARED with other slots (mapped into ``table_row`` by the
     scheduler), so their writes are routed to the trash page — a shared page
     is never mutated by an admission, only read through the table.  The
-    prefill compute still covers the full context (so the tail's attention
-    and the per-slot ring/SSM leaves are exact); writing only the tail is
-    the memory win now, computing only the tail (chunked prefill directly
-    into pages, reading the shared prefix from the pool) is the ROADMAP
-    follow-on.  It is a traced scalar, so varying prefix lengths hit one
-    compilation per prompt length, same as before."""
+    prefill compute still covers the full context here (the chunked path is
+    the one that also skips the shared prefix's FLOPs).  It is a traced
+    scalar, so varying prefix lengths hit one compilation per prompt
+    length."""
     S = tokens.shape[1]
     assert S <= capacity, f"prompt {S} exceeds per-sequence capacity {capacity}"
     x = embed_tokens(cfg, params, tokens)

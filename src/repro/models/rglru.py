@@ -90,7 +90,10 @@ def lru_layer(
     gate = jax.nn.gelu(x @ params["in_gate"])  # [B,S,W]
     xb = x @ params["in_x"]
 
-    prefix = cache["conv"] if (cache is not None and mode.startswith("decode")) else None
+    # decode AND chunked-prefill resume carry state across calls (conv prefix
+    # + recurrence state entering the chunk)
+    resume = cache is not None and (mode.startswith("decode") or mode == "prefill_chunk")
+    prefix = cache["conv"] if resume else None
     from repro.models.ssm import _causal_conv
 
     xb, new_prefix = _causal_conv(xb, params["conv_w"], prefix)
@@ -103,7 +106,7 @@ def lru_layer(
         hs = h[:, None]
         final = h
     else:
-        h0 = cache["state"] if (cache is not None and mode.startswith("decode")) else None
+        h0 = cache["state"] if resume else None
         hs = lru_scan(a, b, h0)
         final = hs[:, -1]
 

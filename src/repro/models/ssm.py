@@ -194,7 +194,11 @@ def ssm_layer(
     z, xin, Bm, Cm, dt = jnp.split(proj, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
 
     conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
-    prefix = cache["conv"] if (cache is not None and mode.startswith("decode")) else None
+    # decode AND chunked-prefill resume carry state across calls: the conv
+    # prefix and SSD state picked up mid-sequence make chunk-by-chunk
+    # processing exact (ssd_chunked takes an init_state for precisely this)
+    resume = cache is not None and (mode.startswith("decode") or mode == "prefill_chunk")
+    prefix = cache["conv"] if resume else None
     conv_out, new_prefix = _causal_conv(conv_in, params["conv_w"], prefix)
     conv_out = jax.nn.silu(conv_out)
     xin, Bm, Cm = jnp.split(conv_out, [di, di + g * n], axis=-1)
@@ -205,7 +209,7 @@ def ssm_layer(
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,h]
     A = -jnp.exp(params["A_log"])  # [h], negative
 
-    init_state = cache["state"] if (cache is not None and mode.startswith("decode")) else None
+    init_state = cache["state"] if resume else None
     if mode.startswith("decode") and S == 1:
         # single-step recurrence
         y, state = ssd_reference(xh.astype(jnp.float32), dt, A, Bh, Ch, init_state)

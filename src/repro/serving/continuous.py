@@ -37,12 +37,31 @@ The decode read path is untouched by construction (tables just point at
 shared pages), which is what makes greedy parity against the non-shared
 paged engine a strict end-to-end oracle.
 
+Paged admission is a **resumable multi-tick state machine** (chunked
+prefill, the default): admission reserves the slot and every prompt page up
+front (all-or-nothing, so free-block admission semantics are unchanged),
+then the prompt's *compute* is spread over engine ticks — each ``step()``
+runs at most ``prefill_chunk`` tokens of prefill (page-aligned chunks,
+written straight into pool pages by ``models.model.paged_prefill_chunk``)
+before decoding the already-running slots, so a long-prompt admission can
+never stall running decodes for more than one chunk of compute.  A
+prefix-sharing admission starts its first chunk AFTER the shared pages and
+reads them in place through the block table, so sharing saves the prefill
+FLOPs as well as the pages.  There is no temp contiguous prefill cache
+anywhere in this path; ``prefill_mode="scatter"`` retains the PR 3/4
+temp-contiguous-then-scatter admission as a parity oracle
+(tests/test_chunked.py asserts token-identical greedy outputs).
+
 Static shapes throughout: slot pool, page pool, and block tables are all
 fixed, so the jitted decode step never recompiles as traffic arrives/leaves
-— the property that makes continuous batching viable under XLA.
+— the property that makes continuous batching viable under XLA.  Chunked
+prefill compiles once per distinct chunk length (the page-aligned budget
+plus each prompt's final remainder), same order as the per-prompt-length
+compiles of the scatter path.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -53,10 +72,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, PagedKVConfig
 from repro.models.model import (
+    arch_fully_paged,
     init_caches,
     init_paged_caches,
     paged_copy_page,
     paged_copy_slot_leaves,
+    paged_prefill_chunk,
     paged_prefill_into_slot,
     paged_ragged_decode_step,
     paged_reset_pages,
@@ -71,6 +92,22 @@ from repro.serving.sampling import sample
 
 @dataclass
 class SlotState:
+    """One decode slot's scheduler-side state.
+
+    Invariants the scheduler maintains (fuzzed by tests/test_prefix.py and
+    tests/test_chunked.py):
+
+      * ``prefilling`` implies ``active`` — the slot holds its pages (all
+        reserved at admission) but is excluded from decode ticks and from
+        lazy growth / CoW in ``_ensure_pages``;
+      * while ``prefilling``, ``pos == prefill_done`` = positions already
+        written to pages (a prefix-sharing admission starts both at
+        ``len(shared) * page_size``), and ``generated`` holds only tokens
+        carried over from a preemption;
+      * once prefill completes, ``generated[-1]`` is sampled but not yet
+        written — the state a parallel-sample fork can share wholesale.
+    """
+
     request_id: int = -1
     pos: int = 0  # next absolute position
     generated: List[int] = field(default_factory=list)
@@ -89,6 +126,14 @@ class SlotState:
     # before the base's first decode tick can draw their first token without
     # recomputing the prefill.
     prefill_logits: Optional[np.ndarray] = None
+    # Chunked-prefill progress (paged admission state machine): the admitted
+    # context still being written, how many positions are done, and whether
+    # the first chunk ran yet (it must RESET the per-slot leaves — the row
+    # still holds the slot's previous occupant's ring/SSM state).
+    prefilling: bool = False
+    prefill_ctx: List[int] = field(default_factory=list)
+    prefill_done: int = 0
+    prefill_started: bool = False
 
 
 @dataclass
@@ -110,9 +155,26 @@ class _Pending:
 
 
 class ContinuousEngine:
-    """Slot-pool continuous batching.  ``step()`` = one decode tick; requests
+    """Slot-pool continuous batching.  ``step()`` = one engine tick (at most
+    one chunk budget of admission prefill, then one decode step); requests
     are admitted on submit() whenever a slot (and, in paged mode, enough free
-    pages) is available.
+    pages for the WHOLE prompt — all-or-nothing) is available.
+
+    Scheduler invariants, and the tests that hold them to account:
+
+      * a refcount>1 page is never written — CoW before every divergent
+        append, trash-routed prefill writes over shared entries
+        (tests/test_prefix.py CoW-isolation, tests/test_kv_pool_prop.py);
+      * mid-prefill slots never decode, and the decode step never touches
+        their pages (table rows masked to -1) — tests/test_chunked.py;
+      * per tick, admission prefill costs at most ``prefill_chunk`` tokens
+        and every decode-eligible slot advances (bounded head-of-line
+        blocking — tests/test_chunked.py interleaving fuzz);
+      * preemption (youngest first) is token-exact from ANY state, including
+        mid-prefill, because re-admission replays (prompt + generated)
+        through the same greedy path — tests/test_paged.py round-trips;
+      * the pool and prefix index drain to empty with traffic
+        (tests/test_prefix.py scheduler fuzz).
 
     Like ``Engine``, accepts MoQ-quantized params (``QuantizedArray`` leaves
     from ``repro.quant.quantize_params``) transparently."""
@@ -122,20 +184,26 @@ class ContinuousEngine:
                  eos_id: int = -1, seed: int = 0, kv_cache_bits: int = 0,
                  paged: bool = False, page_size: Optional[int] = None,
                  n_pages: Optional[int] = None, prefix_sharing: bool = False,
+                 prefill_chunk: int = 0, prefill_mode: str = "chunked",
                  paged_cfg: Optional[PagedKVConfig] = None):
         if paged_cfg is not None:
             # bundled form of the same knobs (configs.base.PagedKVConfig);
             # mixing it with the loose kwargs would silently shadow them
-            if paged or page_size is not None or n_pages is not None or prefix_sharing:
+            if (paged or page_size is not None or n_pages is not None
+                    or prefix_sharing or prefill_chunk):
                 raise ValueError(
-                    "pass either paged_cfg or paged/page_size/n_pages/prefix_sharing, not both"
+                    "pass either paged_cfg or paged/page_size/n_pages/"
+                    "prefix_sharing/prefill_chunk, not both"
                 )
             paged = True
             page_size = paged_cfg.page_size
             n_pages = paged_cfg.n_pages
             prefix_sharing = paged_cfg.prefix_sharing
+            prefill_chunk = paged_cfg.prefill_chunk
         if prefix_sharing and not paged:
             raise ValueError("prefix_sharing requires paged=True (block tables)")
+        if prefill_mode not in ("chunked", "scatter"):
+            raise ValueError(f"prefill_mode must be 'chunked' or 'scatter', got {prefill_mode!r}")
         self.cfg = cfg
         from repro.quant import prepare_params_for_serving
 
@@ -149,9 +217,23 @@ class ContinuousEngine:
         self.kv_cache_bits = kv_cache_bits
         self.paged = paged
         self.prefix_sharing = prefix_sharing
+        self.prefill_mode = prefill_mode
         self.prefix: Optional[PrefixIndex] = None
         if paged:
             self.page_size = page_size = int(page_size or 16)
+            # tokens of prefill compute per admission tick (0 = auto); chunk
+            # boundaries are page-aligned, so at least one page per tick
+            self.prefill_chunk = int(prefill_chunk) if prefill_chunk else max(64, page_size)
+            if self.prefill_chunk < page_size:
+                raise ValueError(
+                    f"prefill_chunk={self.prefill_chunk} must be >= page_size="
+                    f"{page_size} (chunk boundaries are page-aligned)"
+                )
+            # prefix sharing skips the shared prefix's prefill COMPUTE only
+            # when every mixer's state is paged; window-ring / SSM / LRU
+            # per-slot state must be rebuilt by running the prefix (its page
+            # writes are trash-routed — shared pages stay read-only)
+            self._skip_shared_compute = arch_fully_paged(cfg)
             self.max_pages = -(-capacity // page_size)  # table entries per slot
             # n_pages None/0 = auto: slots * pages-per-capacity, i.e. the
             # contiguous worst case (same convention as EngineConfig/--pages)
@@ -183,7 +265,18 @@ class ContinuousEngine:
         self.cow_copies = 0  # pages privately duplicated before a divergent append
         self.prefix_hits = 0  # admissions that shared at least one indexed page
         self.prefix_hit_tokens = 0  # context tokens served from shared pages
+        self.prefill_tokens_total = 0  # prompt tokens actually computed at prefill
+        # context tokens whose prefill compute was SKIPPED because their K/V
+        # was read from shared pages in place (chunked mode only — the
+        # scatter oracle recomputes them; == prefix_hit_tokens there)
+        self.prefill_tokens_skipped = 0
         self.metrics_log: List[dict] = []
+        # Shared prefill budget for the CURRENT tick (None outside step()):
+        # admissions triggered mid-tick (a completion freeing a slot for the
+        # queue) draw their synchronous first chunk from THIS budget, so one
+        # tick never runs more than prefill_chunk tokens of prefill no
+        # matter how many admissions it cascades into.
+        self._tick_budget: Optional[int] = None
         self._metrics_cap = 65_536  # keep a bounded telemetry window
         self.last_metrics: dict = {}
         self._tick = 0
@@ -208,6 +301,22 @@ class ContinuousEngine:
                 )
 
             self._prefill = jax.jit(_prefill_one, donate_argnums=(4,))
+
+            def _prefill_chunk_fn(params, tokens, positions, slot, caches, table_row, *, reset):
+                return paged_prefill_chunk(
+                    cfg, params, tokens, positions, slot, caches, table_row,
+                    capacity=capacity, kv_bits=kv_cache_bits, page_size=page_size,
+                    reset=reset,
+                )
+
+            # one compilation per distinct chunk length (budget + remainders)
+            # x {first, continuation} — the first chunk of an admission resets
+            # the slot's per-slot leaves (previous occupant's state), later
+            # chunks resume them
+            self._prefill_chunk_first = jax.jit(
+                functools.partial(_prefill_chunk_fn, reset=True), donate_argnums=(4,))
+            self._prefill_chunk_cont = jax.jit(
+                functools.partial(_prefill_chunk_fn, reset=False), donate_argnums=(4,))
             self._reset_pages = jax.jit(
                 lambda caches, mask: paged_reset_pages(cfg, caches, mask),
                 donate_argnums=(0,),
@@ -287,10 +396,23 @@ class ContinuousEngine:
         if self.prefix is None or item.fork_of < 0:
             return None
         for b, s in enumerate(self.slots):
-            if (s.active and s.request_id == item.fork_of
+            if (s.active and not s.prefilling and s.request_id == item.fork_of
                     and len(s.generated) == 1 and s.prefill_logits is not None):
                 return b
         return None
+
+    def _fork_base_prefilling(self, item: _Pending) -> bool:
+        """True while ``item``'s fork base is still mid-chunked-prefill: the
+        base's pages are incomplete, so the fork can neither share them nor
+        sensibly degrade (the base WILL reach its shareable admission state
+        in a bounded number of ticks).  The queue head blocks — consistent
+        with FIFO admission never skipping the head."""
+        if self.prefix is None or item.fork_of < 0:
+            return False
+        return any(
+            s.active and s.prefilling and s.request_id == item.fork_of
+            for s in self.slots
+        )
 
     def _admit_fork(self, i: int, b: int, item: _Pending) -> None:
         """Admit ``item`` into slot ``i`` as a page-aligned parallel sample of
@@ -329,7 +451,13 @@ class ContinuousEngine:
         rather than being skipped, so long requests cannot starve.  Under
         prefix sharing, pages covering an indexed full-page prefix of the
         context are shared rather than allocated, and only the tail is
-        prefilled into fresh pages."""
+        prefilled into fresh pages.
+
+        With ``prefill_mode="chunked"`` (default, paged) admission reserves
+        the slot and ALL the prompt's pages, runs the first chunk of prefill
+        synchronously, and leaves the slot ``prefilling`` — subsequent chunks
+        run one budget per ``step()`` interleaved with decode.  The scatter
+        mode (and the contiguous engine) prefill the whole context here."""
         while self.queue:
             free = [i for i, s in enumerate(self.slots) if not s.active]
             if not free:
@@ -341,6 +469,8 @@ class ContinuousEngine:
                 self.queue.pop(0)
                 self._admit_fork(i, fork_base, item)
                 continue
+            if self._fork_base_prefilling(item):
+                return  # the base reaches its shareable state in O(ticks)
             remaining = item.budget - len(item.generated)
             # keep the LAST (capacity - remaining) context tokens: the newest
             # prompt suffix, leaving exactly `remaining` cache tokens to decode
@@ -362,11 +492,30 @@ class ContinuousEngine:
                     self.prefix_hit_tokens += len(shared) * self.page_size
                 self.tables.append(i, shared + fresh)
             self.queue.pop(0)
+            if self.paged and self.prefill_mode == "chunked":
+                # resumable admission: pages are reserved, compute is spread
+                # over ticks.  On fully-paged archs shared-prefix positions
+                # are never computed at all — their K/V is read from the
+                # shared pages in place; ring/SSM archs recompute the prefix
+                # (state rebuild) but still never write the shared pages.
+                start = len(shared) * self.page_size if self._skip_shared_compute else 0
+                self.prefill_tokens_skipped += start
+                self.slots[i] = SlotState(
+                    request_id=item.rid, pos=start, generated=list(item.generated),
+                    budget=item.budget, active=True, admit_seq=self._admit_counter,
+                    prompt_len=item.prompt_len, prompt=item.prompt,
+                    prefilling=True, prefill_ctx=ctx, prefill_done=start,
+                )
+                self._admit_counter += 1
+                self._advance_prefill(i)
+                continue
             toks = jnp.asarray(np.asarray(ctx, np.int32)[None])
             pos = jnp.arange(len(ctx), dtype=jnp.int32)[None]
             if self.paged:
-                # shared-prefix positions are routed to the trash page inside
-                # the scatter: a shared page is never written by an admission
+                # scatter oracle: full-context prefill into a temp contiguous
+                # cache; shared-prefix positions are recomputed but their
+                # writes are routed to the trash page — a shared page is
+                # never written by an admission
                 logits, self.caches = self._prefill(
                     self.params, toks, pos, jnp.asarray(i, jnp.int32), self.caches,
                     jnp.asarray(self.tables.row(i)),
@@ -376,6 +525,7 @@ class ContinuousEngine:
                 logits, self.caches = self._prefill(
                     self.params, toks, pos, jnp.asarray(i, jnp.int32), self.caches
                 )
+            self.prefill_tokens_total += len(ctx)
             self._key, sub = jax.random.split(self._key)
             first = int(sample(logits, sub, temperature=self.temperature,
                                top_k=self.top_k, top_p=self.top_p)[0])
@@ -397,6 +547,100 @@ class ContinuousEngine:
                     self.prefix.insert(ctx, [int(p) for p in self.tables.row(i)[:n_full]])
             self._finish_if_done(i)
 
+    # ------------------------------------------------------------------
+    def _advance_prefill(self, i: int) -> int:
+        """Run slot ``i``'s chunked prefill up to the available budget — the
+        current tick's shared ``_tick_budget`` when inside ``step()``, one
+        full ``prefill_chunk`` when admission happens outside a tick
+        (``submit()``) — and return the number of tokens computed.  Chunk
+        boundaries are page-aligned (every non-final chunk fills whole pages
+        and direct page writes never straddle a tick); the final chunk takes
+        the remainder, and a leftover budget smaller than a page defers to
+        the next tick rather than emitting an unaligned sub-page chunk
+        (which would also cost a fresh XLA compilation per odd length).
+        Full pages are registered in the prefix index PROGRESSIVELY, as soon
+        as their chunk is written — an indexed page must already hold its
+        K/V (another admission may share it the moment it appears), and
+        indexing per chunk lets concurrent admissions share a long prompt's
+        preamble while its tail is still being prefilled.  On the last chunk
+        the returned logits seed the request's first sampled token."""
+        slot = self.slots[i]
+        done = 0
+        # outside a tick (admission from submit()), one chunk budget total
+        local_budget = self.prefill_chunk if self._tick_budget is None else None
+        while slot.active and slot.prefilling:
+            budget = self._tick_budget if local_budget is None else local_budget
+            if budget <= 0:
+                break
+            ctx = slot.prefill_ctx
+            start = slot.prefill_done
+            end = min(len(ctx), start + budget)
+            if end < len(ctx):
+                aligned = end - (end % self.page_size)
+                if aligned <= start:
+                    break  # leftover budget < one page — resume next tick
+                end = aligned
+            toks = jnp.asarray(np.asarray(ctx[start:end], np.int32)[None])
+            pos = jnp.arange(start, end, dtype=jnp.int32)[None]
+            fn = self._prefill_chunk_cont if slot.prefill_started else self._prefill_chunk_first
+            logits, self.caches = fn(
+                self.params, toks, pos, jnp.asarray(i, jnp.int32), self.caches,
+                jnp.asarray(self.tables.row(i)),
+            )
+            slot.prefill_started = True
+            n = end - start
+            done += n
+            self.prefill_tokens_total += n
+            if local_budget is None:
+                self._tick_budget -= n
+            else:
+                local_budget -= n
+            slot.prefill_done = slot.pos = end
+            if self.prefix is not None:
+                # progressive registration: every page this chunk completed
+                # is shareable NOW (existing mappings — the shared prefix
+                # itself — are kept, first writer wins)
+                n_full = end // self.page_size
+                if n_full:
+                    self.prefix.insert(ctx, [int(p) for p in self.tables.row(i)[:n_full]])
+            if end == len(ctx):
+                self._key, sub = jax.random.split(self._key)
+                first = int(sample(logits, sub, temperature=self.temperature,
+                                   top_k=self.top_k, top_p=self.top_p)[0])
+                slot.prefilling = False
+                slot.prefill_ctx = []
+                slot.generated = slot.generated + [first]
+                slot.prefill_logits = np.asarray(logits) if self.prefix is not None else None
+                self._cur_token[i] = first
+                self._finish_if_done(i)
+                if self.queue:
+                    # a fork blocked on THIS slot's prefill can now share it
+                    self._admit()
+        return done
+
+    def _prefill_tick(self) -> None:
+        """One tick's worth of admission prefill: advance prefilling slots in
+        admission order against the tick's shared ``_tick_budget`` (set by
+        ``step()``, spanning the WHOLE tick so completions that cascade into
+        fresh admissions — during this pass or the decode phase — draw their
+        first chunk from the same budget)."""
+        order = sorted(
+            (i for i, s in enumerate(self.slots) if s.active and s.prefilling),
+            key=lambda i: self.slots[i].admit_seq,
+        )
+        for i in order:
+            if self._tick_budget <= 0:
+                break
+            self._advance_prefill(i)
+
+    def _end_tick_prefill(self) -> int:
+        """Close the tick's prefill budget; returns tokens spent this tick."""
+        if self._tick_budget is None:
+            return 0
+        done = self.prefill_chunk - self._tick_budget
+        self._tick_budget = None
+        return done
+
     def _release_slot(self, i: int) -> None:
         if self.paged:
             # decref everything the slot holds; only pages whose refcount hit
@@ -416,7 +660,7 @@ class ContinuousEngine:
 
     def _finish_if_done(self, i: int) -> None:
         slot = self.slots[i]
-        if not slot.active:
+        if not slot.active or slot.prefilling:
             return
         hit_eos = self.eos_id >= 0 and slot.generated and slot.generated[-1] == self.eos_id
         if len(slot.generated) >= slot.budget or hit_eos:
@@ -455,11 +699,16 @@ class ContinuousEngine:
         2. **Copy-on-write** — if the write-position page has refcount > 1
            (a prefix/fork sharer), fork it: allocate a private page, copy the
            device contents, remap this slot's table entry, decref the
-           original.  After this pass every active slot's write page has
+           original.  After this pass every DECODING slot's write page has
            refcount 1, which is the invariant that makes shared pages
-           read-only under decode."""
+           read-only under decode.
+
+        Mid-prefill slots are skipped: their pages were all reserved at
+        admission (no growth needed) and chunks write only freshly-allocated
+        refcount-1 pages (shared prefix pages are page-aligned and strictly
+        before the first chunk, so no CoW either)."""
         order = sorted(
-            (i for i, s in enumerate(self.slots) if s.active),
+            (i for i, s in enumerate(self.slots) if s.active and not s.prefilling),
             key=lambda i: self.slots[i].admit_seq,
         )
         for i in order:
@@ -493,43 +742,62 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One decode tick over all active slots.  Returns #active slots.
+        """One engine tick: at most one chunk-budget of admission prefill
+        (chunked mode), then one decode step over every active slot that is
+        not mid-prefill.  Returns #active slots (decoding + prefilling), so
+        callers keep ticking while long admissions are still being written.
         Per-tick scheduler telemetry lands in ``last_metrics`` /
-        ``metrics_log`` (active slots, free/shared pages, CoW copies, tok/s,
-        preemptions)."""
+        ``metrics_log`` (active slots, prefill/decode token counts,
+        free/shared pages, CoW copies, tok/s, preemptions)."""
         t0 = time.perf_counter()
-        active = np.asarray([s.active for s in self.slots])
-        if not active.any():
+        if self.paged and self.prefill_mode == "chunked":
+            # bounded head-of-line blocking: decode (below) runs every tick,
+            # delayed by at most this one chunk of prefill compute — the
+            # budget spans the whole tick, so admissions cascaded from
+            # completions draw from it too
+            self._tick_budget = self.prefill_chunk
+        if not any(s.active for s in self.slots):
             self._admit()
-            active = np.asarray([s.active for s in self.slots])
-            if not active.any():
+            if not any(s.active for s in self.slots):
+                self._end_tick_prefill()
                 return 0
+        if self._tick_budget is not None:
+            self._prefill_tick()
         if self.paged:
             self._ensure_pages()
-            active = np.asarray([s.active for s in self.slots])
-            if not active.any():
-                return 0
+        # rows eligible to decode this tick — mid-prefill slots are excluded,
+        # and their table rows are masked out of the decode step so its pool
+        # writes land in the trash page, never in a half-written prompt page
+        decoding = np.asarray([s.active and not s.prefilling for s in self.slots])
+        n_active = int(sum(s.active for s in self.slots))
+        if not decoding.any():
+            prefill_toks = self._end_tick_prefill()
+            if n_active or prefill_toks:
+                self._record_metrics(0, time.perf_counter() - t0, prefill_toks,
+                                     n_active)
+            return n_active
         positions = np.asarray([s.pos if s.active else 0 for s in self.slots], np.int32)
         tokens = jnp.asarray(self._cur_token[:, None])
         if self.paged:
+            tbl = np.where(decoding[:, None], self.tables.table, -1)
             logits, self.caches = self._decode(
-                self.params, tokens, jnp.asarray(positions), jnp.asarray(active),
-                self.caches, jnp.asarray(self.tables.table),
+                self.params, tokens, jnp.asarray(positions), jnp.asarray(decoding),
+                self.caches, jnp.asarray(tbl),
             )
         else:
             logits, self.caches = self._decode(
-                self.params, tokens, jnp.asarray(positions), jnp.asarray(active), self.caches
+                self.params, tokens, jnp.asarray(positions), jnp.asarray(decoding), self.caches
             )
         self._key, sub = jax.random.split(self._key)
         nxt = np.asarray(sample(logits, sub, temperature=self.temperature,
                                 top_k=self.top_k, top_p=self.top_p))
-        n_active = int(active.sum())
+        n_decoded = int(decoding.sum())
         for i, slot in enumerate(self.slots):
             # Gate on the PRE-decode snapshot, not slot.active: a completion
             # at row < i can trigger _admit into free row i mid-loop, and
             # that fresh slot must not consume nxt[i] — its logits row was
-            # computed while the row was inactive.
-            if not active[i]:
+            # computed while the row was inactive (or still prefilling).
+            if not decoding[i]:
                 continue
             slot.pos += 1
             slot.generated.append(int(nxt[i]))
@@ -538,20 +806,26 @@ class ContinuousEngine:
             slot.prefill_logits = None
             self._cur_token[i] = int(nxt[i])
             self._finish_if_done(i)
-        self._record_metrics(n_active, time.perf_counter() - t0)
+        prefill_toks = self._end_tick_prefill()
+        self._record_metrics(n_decoded, time.perf_counter() - t0, prefill_toks,
+                             n_active)
         return n_active
 
-    def _record_metrics(self, n_active: int, dt: float) -> None:
+    def _record_metrics(self, n_decoded: int, dt: float, prefill_toks: int = 0,
+                        n_active: Optional[int] = None) -> None:
         self._tick += 1
         m = {
             "tick": self._tick,
-            "active_slots": n_active,
+            # all slots holding pages, INCLUDING mid-prefill ones; the decode
+            # participation count is tokens_this_tick
+            "active_slots": n_decoded if n_active is None else n_active,
             "queue_depth": len(self.queue),
-            "tokens_this_tick": n_active,
-            "tok_per_s": round(n_active / max(dt, 1e-9), 2),
+            "tokens_this_tick": n_decoded,
+            "tok_per_s": round(n_decoded / max(dt, 1e-9), 2),
             "preemptions": self.preemptions,
         }
         if self.paged:
+            m["prefill_tokens"] = prefill_toks
             m["free_pages"] = self.pool.free_count
             m["page_occupancy"] = round(self.pool.occupancy, 4)
             m["shared_pages"] = self.pool.shared_count

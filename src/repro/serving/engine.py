@@ -44,6 +44,7 @@ class EngineConfig:
     page_size: int = 0  # >0 = serve with a paged block pool
     n_pages: int = 0  # 0 = auto (slots * pages-per-capacity, no oversubscription)
     prefix_sharing: bool = False  # refcounted CoW page sharing (needs page_size > 0)
+    prefill_chunk: int = 0  # admission-prefill tokens per tick (0 = auto: max(64, page_size))
 
 
 @dataclass

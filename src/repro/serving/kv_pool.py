@@ -52,6 +52,25 @@ class KVBlockPool:
     extra *trash* page at index ``n_pages`` that is never handed out: writes
     for inactive slots and reads through -1 table entries are routed there —
     see models/attention.py.)
+
+    Invariants (asserted by :meth:`check`, driven through randomized
+    200-operation alloc/share/fork/drop/release traces against a shadow
+    model by ``tests/test_kv_pool_prop.py``):
+
+      * every page is either FREE (on the freelist, refcount 0, no holders)
+        or REFERENCED (off it, refcount == len(holders) >= 1) — never both,
+        never neither;
+      * refcounts never go negative, and occupancy counts a page shared by
+        N slots exactly once (``used_count``);
+      * a double free raises instead of corrupting the freelist, and a
+        blind ``free`` of a still-shared page raises (shared pages are
+        ``drop``ped per holder).
+
+    The pool only does *accounting*; the complementary device-side invariant
+    — a refcount>1 page is never written — is the scheduler's job (CoW in
+    ``ContinuousEngine._ensure_pages``, trash-routing in the prefill
+    scatter/chunk writes) and is asserted bit-for-bit by
+    ``tests/test_prefix.py::test_cow_never_mutates_page_visible_to_another_slot``.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -117,9 +136,13 @@ class KVBlockPool:
 
     # -- alloc / free ------------------------------------------------------
     def alloc(self, n: int, owner: int) -> Optional[List[int]]:
-        """Pop ``n`` pages for ``owner`` (a slot id >= 0), all-or-nothing.
-        Returns the page ids (each with refcount 1), or None if fewer than
-        ``n`` are free."""
+        """Pop ``n`` pages for ``owner`` (a slot id >= 0), all-or-nothing:
+        either exactly ``n`` page ids come back (each refcount 1, held only
+        by ``owner``) or None and the pool is untouched — the property that
+        lets the scheduler admit by free-block count without ever
+        half-admitting a request (``tests/test_kv_pool_prop.py`` fuzzes it;
+        ``tests/test_paged.py::test_admission_by_free_block_count`` relies
+        on it end-to-end)."""
         if owner < 0:
             raise ValueError(f"owner must be >= 0, got {owner}")
         if n < 0:
@@ -201,8 +224,12 @@ class KVBlockPool:
         """Drop every page reference ``owner`` holds (request completion or
         preemption) and return the pages actually FREED — i.e. those whose
         refcount hit zero.  Pages another slot still references are decrefed
-        and stay live (copy-on-write sharing survives the departure).  Safe
-        to call with a stale/unknown owner (drops nothing)."""
+        and stay live (copy-on-write sharing survives the departure — the
+        old exclusive owner-tag model yanked them from under sharers;
+        ``tests/test_prefix.py::test_preempted_sharer_decrefs_not_frees`` is
+        the regression).  Safe to call with a stale/unknown owner (drops
+        nothing).  Callers must evict the RETURNED ids from the prefix index
+        and device-invalidate them (``paged_reset_pages``) before reuse."""
         freed = []
         for p in self.owned_by(owner):
             if self.drop(p, owner):
@@ -220,7 +247,14 @@ class BlockTables:
     Sharing lives entirely in the pool's refcounts: a table row is just
     pointers, so prefix sharing means two rows holding the same page id and
     copy-on-write means rewriting one entry (``set_entry``) after the engine
-    copies the device page."""
+    copies the device page.
+
+    Invariant: a row's mapped entries are a prefix (position order) — pages
+    are appended as the sequence grows and only ever remapped in place
+    (CoW) or reset wholesale; the decode/prefill kernels index the row by
+    ``position // page_size`` and rely on it.  ``tests/test_paged.py``
+    exercises growth/reset; the scheduler fuzz in ``tests/test_prefix.py``
+    drives remapping under sharing."""
 
     def __init__(self, slots: int, max_pages: int):
         if slots <= 0 or max_pages <= 0:

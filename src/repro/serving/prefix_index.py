@@ -42,7 +42,23 @@ class _Node:
 
 
 class PrefixIndex:
-    """Trie of ``page_size``-token chunks -> live physical page ids."""
+    """Trie of ``page_size``-token chunks -> live physical page ids.
+
+    Caller contract (the index cannot check these itself; the randomized
+    scheduler fuzz in ``tests/test_prefix.py`` and the progressive-
+    registration tests in ``tests/test_chunked.py`` enforce them through the
+    engine):
+
+      * **an indexed page already holds its K/V** — chunked prefill inserts
+        each full page only after its chunk is written, because a lookup may
+        hand the page to a sharer on the very next admission;
+      * **eviction tracks the pool** — ``evict_pages`` must be called with
+        exactly the ids ``KVBlockPool.release`` reports freed, so a mapping
+        is live iff its page is; the index drains to empty when the pool
+        does (asserted at the end of every fuzz run);
+      * only FULL pages are ever inserted; a partial page also holds
+        whatever its owner appends next (CoW territory, not shareable).
+    """
 
     def __init__(self, page_size: int):
         if page_size <= 0:

@@ -260,16 +260,20 @@ class TestPagedEngine:
         if prefix:
             assert eng.prefix_hits >= 1
 
-    def test_fragmentation_many_short_one_long(self, setup):
+    @pytest.mark.parametrize("prefill_mode", ["chunked", "scatter"])
+    def test_fragmentation_many_short_one_long(self, setup, prefill_mode):
         """The paged pool serves many short requests plus one long one from
         HALF the contiguous reservation (slots*capacity would need 64 pages'
-        worth; the pool holds 20) — the fragmentation win, token-exact."""
+        worth; the pool holds 20) — the fragmentation win, token-exact.
+        Parametrized over the admission path so the retained scatter oracle
+        keeps scheduler coverage too."""
         cfg, params = setup
         prompts = [[7, 7, 7] for _ in range(6)] + [[1, 2, 3, 4, 5, 6, 7, 8]]
         n_new = [3] * 6 + [20]
         want_eng = ContinuousEngine(cfg, params, slots=4, capacity=32)
         got_eng = ContinuousEngine(cfg, params, slots=4, capacity=32,
-                                   paged=True, page_size=2, n_pages=20)
+                                   paged=True, page_size=2, n_pages=20,
+                                   prefill_mode=prefill_mode)
         outs = []
         for eng in (want_eng, got_eng):
             ids = [eng.submit(Request(prompt=p, max_new_tokens=n))
@@ -279,15 +283,20 @@ class TestPagedEngine:
         assert outs[0] == outs[1]
         assert got_eng.pool.free_count == 20
 
-    def test_preemption_round_trip(self, setup):
+    @pytest.mark.parametrize("prefill_mode", ["chunked", "scatter"])
+    def test_preemption_round_trip(self, setup, prefill_mode):
         """A pool too small for all admitted sequences preempts the youngest
-        slot back to the queue; resumed decoding is token-exact."""
+        slot back to the queue; resumed decoding is token-exact.  Runs under
+        both admission paths — preemption + re-admission is exactly where
+        the scatter oracle's temp-prefill machinery could rot unseen."""
         cfg, params = setup
         prompts = [[i + 1] * 6 for i in range(3)]
         want, _ = _serve(cfg, params, prompts, 8, slots=3, capacity=32,
-                         paged=True, page_size=4, n_pages=64)
+                         paged=True, page_size=4, n_pages=64,
+                         prefill_mode=prefill_mode)
         got, eng = _serve(cfg, params, prompts, 8, slots=3, capacity=32,
-                          paged=True, page_size=4, n_pages=8)
+                          paged=True, page_size=4, n_pages=8,
+                          prefill_mode=prefill_mode)
         assert eng.preemptions >= 1
         assert got == want, (got, want)
 

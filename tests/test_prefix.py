@@ -162,17 +162,22 @@ class TestPhysicalSharing:
 
 
 class TestPrefixParity:
+    @pytest.mark.parametrize("prefill_mode", ["chunked", "scatter"])
     @pytest.mark.parametrize("kv_bits", [0, 8])
-    def test_matches_unshared_engine_greedy(self, setup, kv_bits):
+    def test_matches_unshared_engine_greedy(self, setup, kv_bits, prefill_mode):
         """Acceptance: token-identical greedy outputs with sharing enabled,
-        fp and int8 KV pages, while admissions actually hit the index."""
+        fp and int8 KV pages, while admissions actually hit the index —
+        under both admission paths (the scatter oracle's scatter_start
+        trash-routing is exactly what sharing exercises there)."""
         cfg, params = setup
         prompts = [PRE + [11], PRE + [12, 13], PRE + [14, 15, 16], [9, 8, 7]]
         want, _ = _serve(cfg, params, prompts, 5, slots=3, capacity=32,
-                         kv_cache_bits=kv_bits, paged=True, page_size=4, n_pages=24)
+                         kv_cache_bits=kv_bits, paged=True, page_size=4,
+                         n_pages=24, prefill_mode=prefill_mode)
         got, eng = _serve(cfg, params, prompts, 5, slots=3, capacity=32,
                           kv_cache_bits=kv_bits, paged=True, page_size=4,
-                          n_pages=24, prefix_sharing=True)
+                          n_pages=24, prefix_sharing=True,
+                          prefill_mode=prefill_mode)
         assert got == want, (got, want)
         assert eng.prefix_hits >= 2
         assert eng.pool.free_count == eng.n_pages and len(eng.prefix) == 0
