@@ -1,4 +1,4 @@
-.PHONY: test test-quant test-paged test-prefix test-chunked test-dist bench-quant bench-kv bench-paged bench-prefix bench-chunked
+.PHONY: test test-quant test-paged test-prefix test-chunked test-obs test-dist bench-quant bench-kv bench-paged bench-prefix bench-chunked bench-obs
 
 test:
 	sh scripts/ci.sh
@@ -14,6 +14,9 @@ test-prefix:
 
 test-chunked:
 	PYTHONPATH=src python -m pytest -q tests/test_chunked.py
+
+test-obs:
+	PYTHONPATH=src python -m pytest -q tests/test_obs.py
 
 test-dist:
 	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -33,3 +36,6 @@ bench-prefix:
 
 bench-chunked:
 	PYTHONPATH=src python -m benchmarks.run chunked_prefill
+
+bench-obs:
+	PYTHONPATH=src python -m benchmarks.run obs

@@ -20,6 +20,12 @@ python -m pytest -q tests/test_paged.py
 # parity vs the non-prefix engine, and the randomized scheduler fuzz
 python -m pytest -q tests/test_kv_pool_prop.py tests/test_prefix.py
 
+# observability stage: histogram percentile math, tracer nesting + Chrome
+# trace_event schema, SLO accounting (queue-wait/TTFT/TPOT) on a
+# hand-scheduled run, routing-stats parity with load_balance_stats under
+# jit, and the steady-state zero-retrace regression
+python -m pytest -q tests/test_obs.py
+
 # chunked-prefill stage: prefill-chunk kernel vs ref, chunked-vs-scatter
 # greedy parity (fp/int8, ring mixes, prefix sharing), chunk-boundary sweep,
 # and the resumable admission state machine (bounded decode stalls,

@@ -107,6 +107,81 @@ def load_balance_stats(probs: jax.Array, expert_idx: jax.Array, num_experts: int
     return f, p
 
 
+class RoutingStats(NamedTuple):
+    """Jit-returnable routing telemetry for one MoE layer (paper §3, §5:
+    expert load balance is the MoE-specific serving/training signal).  All
+    leaves have token-count-independent shapes, so the engines can return
+    them from fixed-shape jitted steps and aggregate host-side.
+
+    tokens_per_expert: [E] int32 — assignments KEPT per expert (all k slots)
+    dropped_frac:      []  f32   — fraction of (token, k) assignments dropped
+                                   by expert capacity
+    entropy:           []  f32   — mean router-softmax entropy (nats);
+                                   ln(E) = uniform, 0 = collapsed
+    imbalance:         []  f32   — E · Σ_e f_e·P_e (the aux-loss statistic);
+                                   1.0 = perfectly balanced, E = collapse
+    f:                 [E] f32   — fraction of primary (k=0) assignments
+    p:                 [E] f32   — mean router probability
+    """
+
+    tokens_per_expert: jax.Array
+    dropped_frac: jax.Array
+    entropy: jax.Array
+    imbalance: jax.Array
+    f: jax.Array
+    p: jax.Array
+
+
+def routing_stats(g: Gating, num_experts: int) -> RoutingStats:
+    """RoutingStats from one layer's gating decision.  ``f``/``p`` (and the
+    ``imbalance`` built from them) are exactly ``load_balance_stats`` — the
+    parity tests/test_obs.py asserts — so telemetry can never drift from the
+    loss the model trains against."""
+    f, p = load_balance_stats(g.probs, g.expert_idx, num_experts)
+    # kept assignments per expert over ALL k slots (dropped ones route to a
+    # scratch bucket at index E and are cut off)
+    kept_idx = jnp.where(g.keep, g.expert_idx, num_experts).reshape(-1)
+    tokens_per_expert = jnp.bincount(kept_idx, length=num_experts + 1)[:num_experts]
+    dropped = 1.0 - jnp.mean(g.keep.astype(jnp.float32))
+    entropy = -jnp.mean(jnp.sum(g.probs * jnp.log(g.probs + 1e-9), axis=-1))
+    imbalance = num_experts * jnp.sum(f * p)
+    return RoutingStats(tokens_per_expert.astype(jnp.int32), dropped, entropy,
+                        imbalance, f, p)
+
+
+def summarize_routing(stats_tree) -> dict:
+    """Host-side per-layer aggregation of a routing-stats pytree as returned
+    by ``forward(..., return_routing=True)`` / the engines' decode steps:
+    ``{seg: {pos: RoutingStats with [repeats, ...] leaves}}``.
+
+    Returns plain floats/lists (JSON-ready): overall means across MoE layers
+    plus a per-layer breakdown keyed ``"{seg}/{pos}[repeat]"``."""
+    import numpy as np
+
+    per_layer = {}
+    for seg in sorted(stats_tree):
+        for pos in sorted(stats_tree[seg]):
+            st = stats_tree[seg][pos]
+            reps = np.asarray(st.dropped_frac).shape[0]
+            tpe = np.asarray(st.tokens_per_expert)
+            for r in range(reps):
+                per_layer[f"{seg}/{pos}[{r}]"] = {
+                    "dropped_frac": float(np.asarray(st.dropped_frac)[r]),
+                    "entropy": float(np.asarray(st.entropy)[r]),
+                    "imbalance": float(np.asarray(st.imbalance)[r]),
+                    "tokens_per_expert": tpe[r].tolist(),
+                    "max_expert_load": (float(tpe[r].max() / max(tpe[r].sum(), 1))),
+                }
+    n = max(len(per_layer), 1)
+    return {
+        "moe_layers": len(per_layer),
+        "dropped_frac": sum(v["dropped_frac"] for v in per_layer.values()) / n,
+        "entropy": sum(v["entropy"] for v in per_layer.values()) / n,
+        "imbalance": sum(v["imbalance"] for v in per_layer.values()) / n,
+        "per_layer": per_layer,
+    }
+
+
 def load_balance_loss(probs: jax.Array, expert_idx: jax.Array, num_experts: int) -> jax.Array:
     """Switch-Transformer auxiliary loss: E * sum_e f_e * P_e (paper Table 1:
     'MoE loss coefficient' scales this in the total loss).  f_e counts primary

@@ -20,7 +20,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import FFNSpec, ModelConfig
 from repro.core import dispatch, dispatch_einsum
-from repro.core.gating import expert_capacity, load_balance_loss, top_k_gating
+from repro.core.gating import (
+    expert_capacity,
+    load_balance_loss,
+    routing_stats,
+    top_k_gating,
+)
 from repro.models.modules import dense_init, init_mlp, mlp
 from repro.parallel.sharding import get_mesh, shard_hint
 from repro.quant.qarrays import QuantizedArray
@@ -126,11 +131,15 @@ def moe_layer(
     x: jax.Array,  # [B, S, D]
     *,
     impl: str | None = None,
-) -> Tuple[jax.Array, jax.Array]:
-    """Returns (y [B,S,D], aux_loss scalar)."""
+    with_stats: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """Returns (y [B,S,D], aux_loss scalar); with ``with_stats=True`` a
+    third element — a jit-returnable ``RoutingStats`` (token-count-
+    independent shapes) for per-layer telemetry (docs/OBSERVABILITY.md)."""
     impl = impl or cfg.moe_impl
     B, S, D = x.shape
     E, K = spec.num_experts, spec.top_k
+    stats = None
 
     if impl == "ep" and get_mesh() is not None:
         from repro.core.moe_parallel import moe_layer_ep
@@ -147,6 +156,17 @@ def moe_layer(
                 {k: params[k] for k in ("wi", "wg", "wo") if k in params}
             )}
         y, aux = moe_layer_ep(cfg, spec, params, x)
+        if with_stats:
+            # Telemetry for the EP path: re-run router + gating on the full
+            # (replicated) token set OUTSIDE shard_map.  probs/top-k/f/P are
+            # identical to the sharded dispatch; drop accounting uses the
+            # global single-device capacity, so it approximates the
+            # per-shard local-capacity drops (documented caveat — the
+            # router matmul is T×E, negligible next to the experts).
+            xs = x.reshape(B * S, D)
+            capacity = expert_capacity(B * S, E, K, spec.capacity_factor)
+            logits = xs.astype(jnp.float32) @ params["router"]
+            stats = routing_stats(top_k_gating(logits, K, capacity), E)
     else:
         xs = x.reshape(B * S, D)
         T = B * S
@@ -159,10 +179,14 @@ def moe_layer(
         else:  # dense mapping-table
             y = dispatch.moe_dense(xs, g, capacity, E, ef)
         aux = load_balance_loss(g.probs, g.expert_idx, E)
+        if with_stats:
+            stats = routing_stats(g, E)
         y = y.reshape(B, S, D)
 
     if spec.residual:
         # Residual-MoE (§4.1.1): fixed dense MLP branch + gated expert branch.
         y = y + mlp(params["residual"], x, spec.act)
     y = shard_hint(y, "batch", "seq", "embed")
+    if with_stats:
+        return y, aux, stats
     return y, aux

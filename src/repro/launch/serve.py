@@ -14,6 +14,15 @@ Composes with ``--kv-bits 8`` (int8 pages) and ``--quant-bits``.
 whose context repeats an indexed full-page prefix point their block tables
 at the existing physical pages, and ``--n-samples N`` serves N parallel
 samples per prompt off one set of prompt pages (diverging via CoW).
+
+Observability (docs/OBSERVABILITY.md): the run's SLO histograms (queue-wait,
+TTFT, TPOT, tick latency), lifecycle counters, and MoE routing gauges are
+printed from one metrics ``snapshot()`` — ``--metrics-out`` appends the SAME
+snapshot as a JSON line, so the CLI and the file can never disagree.
+``--trace-out`` records the full request lifecycle (queued → prefill
+chunk(s) → decode → complete, plus preemption/CoW/prefix-hit instants) as
+Chrome ``trace_event`` JSON; load it at https://ui.perfetto.dev.
+``--obs-routing`` adds per-decode-tick expert-routing telemetry.
 """
 from __future__ import annotations
 
@@ -26,6 +35,7 @@ import numpy as np
 from repro.checkpoint import ckpt
 from repro.configs.registry import get_config, make_reduced
 from repro.models.model import init_params
+from repro.obs import Obs
 from repro.serving.engine import Engine, EngineConfig, Request
 
 
@@ -76,6 +86,17 @@ def main() -> None:
                          "— contexts repeating an indexed full-page prefix "
                          "point their block tables at the existing pages "
                          "(serving/prefix_index.py)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "request lifecycle (slots, requests, engine ticks) "
+                         "to PATH; load in https://ui.perfetto.dev")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append the final metrics snapshot (counters, "
+                         "gauges, SLO histograms) to PATH as one JSON line")
+    ap.add_argument("--obs-routing", action="store_true",
+                    help="collect per-decode-tick MoE routing telemetry "
+                         "(per-expert load, dropped-token fraction, gate "
+                         "entropy, f*P imbalance) in the jitted step")
     ap.add_argument("--n-samples", type=int, default=1,
                     help="parallel samples per prompt (paged continuous "
                          "engine); with --prefix-sharing the samples share "
@@ -159,7 +180,8 @@ def main() -> None:
         prefix_sharing=args.prefix_sharing,
         prefill_chunk=args.prefill_chunk,
     )
-    eng = None if args.paged else Engine(cfg, params, ec)
+    obs = Obs(trace=bool(args.trace_out), routing=args.obs_routing)
+    eng = None if args.paged else Engine(cfg, params, ec, obs=obs)
     if args.kv_bits and eng is not None:
         from repro.models.model import init_caches
         from repro.quant import kv_cache_bytes
@@ -199,7 +221,7 @@ def main() -> None:
         ceng = ContinuousEngine(
             cfg, params, slots=slots, capacity=capacity,
             temperature=ec.temperature, top_k=ec.top_k, top_p=ec.top_p,
-            kv_cache_bits=ec.kv_cache_bits, paged_cfg=pcfg,
+            kv_cache_bits=ec.kv_cache_bits, paged_cfg=pcfg, obs=obs,
         )
         contig_b = kv_cache_bytes(jax.eval_shape(
             lambda: init_caches(cfg, slots, capacity, kv_bits=args.kv_bits)))
@@ -218,6 +240,7 @@ def main() -> None:
         ceng.prefill_tokens_total = 0
         ceng.prefill_tokens_skipped = 0
         ceng.metrics_log.clear()
+        obs.metrics.reset_all()  # drop warmup/compile samples from the window
         t0 = time.time()
         if args.n_samples > 1:
             ids = [rid for r in reqs for rid in ceng.submit_n(r, args.n_samples)]
@@ -226,38 +249,47 @@ def main() -> None:
         done = ceng.run_until_done()
         dt = time.time() - t0
         n_tok = sum(len(done[i].tokens) for i in ids)
-        m = ceng.last_metrics
         print(f"served {len(ids)} requests, {n_tok} tokens in {dt:.2f}s "
               f"({n_tok/dt:.1f} tok/s, arch={cfg.name}, paged, "
-              f"preemptions={ceng.preemptions}, peak_occupancy="
-              f"{max((r.get('page_occupancy', 0.0) for r in ceng.metrics_log), default=0.0):.2f})")
-        if args.prefix_sharing:
-            peak_shared = max((r.get("shared_pages", 0) for r in ceng.metrics_log),
-                              default=0)
-            print(f"prefix sharing: hits={ceng.prefix_hits}, "
-                  f"shared_tokens={ceng.prefix_hit_tokens}, "
-                  f"peak_shared_pages={peak_shared}, cow_copies={ceng.cow_copies}")
-        if ceng.prefill_mode == "chunked":
-            pf = [r.get("prefill_tokens", 0) for r in ceng.metrics_log]
-            dc = [r.get("tokens_this_tick", 0) for r in ceng.metrics_log]
-            print(f"chunked prefill: chunk={ceng.prefill_chunk} tok/tick, "
-                  f"prefill_tokens={ceng.prefill_tokens_total} "
-                  f"(skipped_shared={ceng.prefill_tokens_skipped}), "
-                  f"per_tick prefill/decode = {sum(pf)}/{sum(dc)} "
-                  f"(peak prefill/tick={max(pf, default=0)}, "
-                  f"peak decode/tick={max(dc, default=0)})")
-        print("last tick metrics:", m)
+              f"prefill_mode={ceng.prefill_mode})")
+        # everything below — preemptions, page occupancy, prefix-sharing
+        # hits/CoW, chunked-prefill split, SLO percentiles — renders from
+        # the ONE snapshot that --metrics-out also writes
+        print(obs.metrics.render(prefix="  "))
+        if args.metrics_out:
+            obs.metrics.write_jsonl(args.metrics_out, extra={
+                "arch": cfg.name, "paged": True, "requests": len(ids),
+                "tokens": n_tok, "wall_s": dt,
+                "prefill_mode": ceng.prefill_mode,
+            })
+            print(f"metrics snapshot -> {args.metrics_out}")
+        if args.trace_out:
+            obs.tracer.export(args.trace_out)
+            print(f"trace ({obs.tracer.n_events} events) -> {args.trace_out}; "
+                  "load in https://ui.perfetto.dev")
         print("sample:", done[ids[0]].tokens[:10])
         return
 
     # warmup (compile)
     eng.generate(reqs[: args.batch])
+    obs.metrics.reset_all()  # drop warmup/compile samples from the window
     t0 = time.time()
     responses = eng.generate(reqs)
     dt = time.time() - t0
     n_tok = sum(len(r.tokens) for r in responses)
     print(f"served {len(responses)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s, arch={cfg.name}, moe_impl={cfg.moe_impl})")
+    print(obs.metrics.render(prefix="  "))
+    if args.metrics_out:
+        obs.metrics.write_jsonl(args.metrics_out, extra={
+            "arch": cfg.name, "paged": False, "requests": len(responses),
+            "tokens": n_tok, "wall_s": dt,
+        })
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        obs.tracer.export(args.trace_out)
+        print(f"trace ({obs.tracer.n_events} events) -> {args.trace_out}; "
+              "load in https://ui.perfetto.dev")
     print("sample:", responses[0].tokens[:10])
 
 

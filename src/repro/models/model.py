@@ -137,19 +137,33 @@ def encode(cfg: ModelConfig, params: dict, source: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _run_segments(cfg, params, x, positions, caches, mode, memory, remat, block_table=None):
+def _run_segments(cfg, params, x, positions, caches, mode, memory, remat,
+                  block_table=None, collect_stats=False):
+    """With ``collect_stats=True`` returns a 4th element: ``{seg{i}: {pos{j}:
+    RoutingStats[repeats, ...]}}`` for every MoE position — the per-layer
+    routing telemetry tree (jit-returnable; host side aggregates via
+    ``core.gating.summarize_routing``)."""
     aux = jnp.zeros((), jnp.float32)
     new_caches = {}
+    stats = {}
     for i, seg in enumerate(cfg.segments):
         c = caches.get(f"seg{i}") if caches is not None else None
-        x, c_new, a = apply_segment(
+        out = apply_segment(
             cfg, seg, params["segments"][f"seg{i}"], x, positions,
             caches=c, mode=mode, memory=memory, remat=remat, block_table=block_table,
+            collect_stats=collect_stats,
         )
+        if collect_stats:
+            x, c_new, a, seg_stats = out
+            if seg_stats:
+                stats[f"seg{i}"] = seg_stats
+        else:
+            x, c_new, a = out
         aux = aux + a
         if caches is not None:
             new_caches[f"seg{i}"] = c_new
-    return x, (new_caches if caches is not None else None), aux
+    res = (x, (new_caches if caches is not None else None), aux)
+    return res + (stats,) if collect_stats else res
 
 
 def forward(
@@ -161,8 +175,11 @@ def forward(
     memory: Optional[jax.Array] = None,
     prefix_embeds: Optional[jax.Array] = None,  # vlm patch embeddings [B, P, De]
     remat: bool = False,
-) -> Tuple[jax.Array, jax.Array]:
-    """Teacher-forced logits [B, S(+P), V]; returns (logits, aux_loss)."""
+    return_routing: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """Teacher-forced logits [B, S(+P), V]; returns (logits, aux_loss).
+    ``return_routing=True`` (static) appends the per-layer routing-stats
+    tree (see ``_run_segments``) as a third element."""
     x = embed_tokens(cfg, params, tokens)
     if prefix_embeds is not None:
         pre = prefix_embeds.astype(x.dtype) @ materialize(params["frontend_proj"])
@@ -170,6 +187,11 @@ def forward(
     S = x.shape[1]
     if positions is None:
         positions = jnp.arange(S, dtype=jnp.int32)[None]
+    if return_routing:
+        x, _, aux, routing = _run_segments(
+            cfg, params, x, positions, None, "train", memory, remat, collect_stats=True
+        )
+        return logits_out(cfg, params, x), aux, routing
     x, _, aux = _run_segments(cfg, params, x, positions, None, "train", memory, remat)
     return logits_out(cfg, params, x), aux
 
@@ -203,11 +225,18 @@ def decode_step(
     caches: dict,
     *,
     memory: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, dict]:
-    """One decode step: returns (logits [B, V], updated caches)."""
+    return_routing: bool = False,
+) -> Tuple:
+    """One decode step: returns (logits [B, V], updated caches);
+    ``return_routing=True`` appends the routing-stats tree."""
     x = embed_tokens(cfg, params, token)
     B = x.shape[0]
     positions = jnp.broadcast_to(index.astype(jnp.int32), (B, 1))
+    if return_routing:
+        x, new_caches, _, routing = _run_segments(
+            cfg, params, x, positions, caches, "decode", memory, False, collect_stats=True
+        )
+        return logits_out(cfg, params, x)[:, 0], new_caches, routing
     x, new_caches, _ = _run_segments(cfg, params, x, positions, caches, "decode", memory, False)
     logits = logits_out(cfg, params, x)[:, 0]
     return logits, new_caches
@@ -222,14 +251,25 @@ def ragged_decode_step(
     caches: dict,
     *,
     memory: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, dict]:
+    return_routing: bool = False,
+) -> Tuple:
     """Continuous-batching decode tick: each slot/row decodes at its own
-    position; inactive rows' caches are left untouched (masked merge)."""
+    position; inactive rows' caches are left untouched (masked merge).
+    ``return_routing=True`` appends the routing-stats tree (stats cover
+    every slot row, active or not — padding rows route too; host side
+    treats the per-tick stats as a load-shape sample, not exact counts)."""
     x = embed_tokens(cfg, params, token)
     pos2d = positions.astype(jnp.int32)[:, None]
-    x, new_caches, _ = _run_segments(
-        cfg, params, x, pos2d, caches, "decode_ragged", memory, False
-    )
+    routing = None
+    if return_routing:
+        x, new_caches, _, routing = _run_segments(
+            cfg, params, x, pos2d, caches, "decode_ragged", memory, False,
+            collect_stats=True,
+        )
+    else:
+        x, new_caches, _ = _run_segments(
+            cfg, params, x, pos2d, caches, "decode_ragged", memory, False
+        )
     logits = logits_out(cfg, params, x)[:, 0]
 
     def _merge(new, old):
@@ -238,6 +278,8 @@ def ragged_decode_step(
         return jnp.where(mask, new, old)
 
     merged = jax.tree.map(_merge, new_caches, caches)
+    if return_routing:
+        return logits, merged, routing
     return logits, merged
 
 
@@ -304,17 +346,26 @@ def paged_ragged_decode_step(
     block_table: jax.Array,  # [B, max_pages] int32, -1 = unmapped
     *,
     memory: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, dict]:
+    return_routing: bool = False,
+) -> Tuple:
     """Continuous-batching decode tick over paged caches.  Pool writes are
     self-masking (inactive slots' table rows are all -1, so their writes land
     in the trash page); the per-slot leaves (window rings, SSM/LRU states,
-    cross caches) get the same masked merge as ``ragged_decode_step``."""
+    cross caches) get the same masked merge as ``ragged_decode_step``.
+    ``return_routing=True`` appends the routing-stats tree."""
     x = embed_tokens(cfg, params, token)
     pos2d = positions.astype(jnp.int32)[:, None]
-    x, new_caches, _ = _run_segments(
-        cfg, params, x, pos2d, caches, "decode_paged", memory, False,
-        block_table=block_table,
-    )
+    routing = None
+    if return_routing:
+        x, new_caches, _, routing = _run_segments(
+            cfg, params, x, pos2d, caches, "decode_paged", memory, False,
+            block_table=block_table, collect_stats=True,
+        )
+    else:
+        x, new_caches, _ = _run_segments(
+            cfg, params, x, pos2d, caches, "decode_paged", memory, False,
+            block_table=block_table,
+        )
     logits = logits_out(cfg, params, x)[:, 0]
 
     def _merge(new, old):
@@ -332,6 +383,8 @@ def paged_ragged_decode_step(
             else:
                 out[key] = jax.tree.map(_merge, c_new[key], c_old[key])
         merged.setdefault(sk, {})[pk] = out
+    if return_routing:
+        return logits, merged, routing
     return logits, merged
 
 

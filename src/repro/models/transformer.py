@@ -99,9 +99,14 @@ def apply_layer(
     mode: str = "train",
     memory: Optional[jax.Array] = None,
     block_table: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, Optional[dict], jax.Array]:
-    """Returns (x, new_cache, aux_loss)."""
+    collect_stats: bool = False,
+) -> Tuple:
+    """Returns (x, new_cache, aux_loss); with ``collect_stats=True`` a 4th
+    element — the MoE layer's jit-returnable ``RoutingStats`` (None for
+    non-MoE layers).  The flag is static (part of the trace), so telemetry
+    collection is decided when the caller builds its jitted step."""
     aux = jnp.zeros((), jnp.float32)
+    stats = None
     h = rmsnorm(params["norm_mixer"], x, cfg.rms_eps)
     sc = cache.get("self") if cache is not None else None
     m = ls.mixer
@@ -134,7 +139,10 @@ def apply_layer(
         x = x + mlp(params["ffn"], h, ls.ffn.act)
     elif ls.ffn.kind == "moe":
         h = rmsnorm(params["norm_ffn"], x, cfg.rms_eps)
-        y, aux = moe_layer(cfg, ls.ffn, params["moe"], h)
+        if collect_stats:
+            y, aux, stats = moe_layer(cfg, ls.ffn, params["moe"], h, with_stats=True)
+        else:
+            y, aux = moe_layer(cfg, ls.ffn, params["moe"], h)
         x = x + y
 
     if new_cache is not None and "self" in new_cache:
@@ -144,6 +152,8 @@ def apply_layer(
         from repro.models.modules import grad_cast
 
         x = grad_cast(x)
+    if collect_stats:
+        return x, new_cache, aux, stats
     return x, new_cache, aux
 
 
@@ -181,9 +191,13 @@ def apply_segment(
     memory: Optional[jax.Array] = None,
     remat: bool = False,
     block_table: Optional[jax.Array] = None,
+    collect_stats: bool = False,
 ):
     """Scan the segment.  caches (if given) mirror the params structure with a
-    leading ``repeats`` axis.  Returns (x, new_caches, aux_sum).
+    leading ``repeats`` axis.  Returns (x, new_caches, aux_sum); with
+    ``collect_stats=True`` a 4th element — ``{pos{j}: RoutingStats}`` for the
+    pattern's MoE positions, each leaf stacked ``[repeats, ...]`` by the scan
+    (per-layer telemetry falls out of the scan's ys stacking for free).
 
     ``block_table`` (paged decode) is layer-invariant: every layer's page
     pool shares one table, so it rides into the scan body as a capture."""
@@ -192,17 +206,27 @@ def apply_segment(
     def body(carry, xs):
         x, aux = carry
         new_caches = {}
+        stats_out = {}
         for j, ls in enumerate(seg.pattern):
             pkey = f"pos{j}"
             c = xs[1][pkey] if has_cache else None
-            x, c_new, a = apply_layer(
+            out = apply_layer(
                 cfg, ls, xs[0][pkey], x, positions, cache=c, mode=mode, memory=memory,
-                block_table=block_table,
+                block_table=block_table, collect_stats=collect_stats,
             )
+            if collect_stats:
+                x, c_new, a, st = out
+                if st is not None:
+                    stats_out[pkey] = st
+            else:
+                x, c_new, a = out
             if has_cache:
                 new_caches[pkey] = c_new
             aux = aux + a
-        return (x, aux), (new_caches if has_cache else 0)
+        ys = new_caches if has_cache else 0
+        if collect_stats:
+            ys = (ys, stats_out)
+        return (x, aux), ys
 
     if remat:
         body = jax.checkpoint(body, prevent_cse=False)
@@ -212,6 +236,9 @@ def apply_segment(
     (x, aux), ys = jax.lax.scan(
         body, (x, jnp.zeros((), jnp.float32)), xs, unroll=_SCAN_UNROLL[0] or 1
     )
+    if collect_stats:
+        ys, stats = ys
+        return x, (ys if has_cache else None), aux, stats
     return x, (ys if has_cache else None), aux
 
 

@@ -1,0 +1,130 @@
+"""Retrace watchdog: per-tick jit compile accounting for the serving engines.
+
+Continuous batching is only viable under XLA because the decode tick is a
+fixed-shape jitted call that compiles ONCE — any shape (or static-arg) drift
+silently turns a ~ms tick into a ~s compile.  The fused-tick ROADMAP item
+asks for exactly this instrument: compile-count before/after across a
+scheduler run, and a warning the moment a *steady-state* tick recompiles.
+
+Implementation: every jitted callable JAX returns carries a per-function
+trace-cache whose size ``_cache_size()`` reports (jax 0.4.x and newer; the
+accessor is probed defensively so an API change degrades to "watchdog
+inactive", never an engine failure).  The watchdog samples the sizes of all
+registered functions each tick and reports the delta as that tick's compile
+count.  Warmup compiles (first decode, each distinct prefill chunk length)
+are expected; after ``steady_after`` consecutive zero-compile ticks the
+engine is declared steady, and any later compile fires ``warn_fn`` once per
+offending tick and increments ``steady_retraces``.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Callable, Dict, Optional
+
+
+def jit_cache_size(fn) -> Optional[int]:
+    """Trace-cache entry count of a jitted callable, or None when the
+    running jax does not expose one (watchdog degrades to inactive)."""
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        n = probe() if callable(probe) else probe
+    except Exception:
+        return None
+    return int(n) if isinstance(n, int) else None
+
+
+class RetraceWatchdog:
+    """Tracks compile-count deltas across engine ticks.
+
+    Usage: ``register`` each jitted function at engine construction, call
+    ``tick()`` once per scheduler step — it returns the number of fresh
+    compilations since the previous call and maintains the steady-state
+    accounting."""
+
+    def __init__(self, steady_after: int = 3,
+                 warn_fn: Callable[[str], None] = None):
+        self.steady_after = steady_after
+        self.warn_fn = warn_fn if warn_fn is not None else (
+            lambda msg: warnings.warn(msg, RuntimeWarning, stacklevel=3))
+        self._fns: Dict[str, object] = {}
+        self._aux: set = set()  # names exempt from steady-state warnings
+        self._last: Dict[str, int] = {}
+        self.total_compiles = 0  # lifetime compiles seen across all fns
+        self.steady_retraces = 0  # compiles AFTER steady state was reached
+        self._zero_streak = 0
+        self.steady = False
+        self.active = True  # False if no registered fn exposes a cache size
+
+    def register(self, name: str, fn, aux: bool = False) -> None:
+        """``aux=True`` marks a function whose compiles COUNT but never fire
+        the steady-state warning: admission prefills compile once per novel
+        chunk/prompt length and page-reset/copy helpers compile on their
+        first use, which can legitimately happen long after the decode step
+        went steady.  Only non-aux functions (the fixed-shape decode tick)
+        carry the never-retrace-after-warmup contract."""
+        if fn is None:
+            return
+        self._fns[name] = fn
+        if aux:
+            self._aux.add(name)
+        size = jit_cache_size(fn)
+        self._last[name] = 0 if size is None else size
+
+    def _sizes(self) -> Dict[str, int]:
+        out = {}
+        for name, fn in self._fns.items():
+            size = jit_cache_size(fn)
+            if size is not None:
+                out[name] = size
+        return out
+
+    def tick(self) -> int:
+        """Compiles since the last tick (0 when inactive)."""
+        sizes = self._sizes()
+        if not sizes and self._fns:
+            self.active = False
+            return 0
+        fresh = 0
+        primary_fresh = 0
+        culprits = []
+        for name, size in sizes.items():
+            prev = self._last.get(name, 0)
+            d = size - prev
+            if d > 0:
+                fresh += d
+                # a primary fn's FIRST-ever compile is warmup no matter how
+                # late it lands (e.g. every slot spends the early ticks in
+                # chunked prefill, so decode first compiles after the
+                # zero-compile streak already declared the engine steady);
+                # the contract is about RE-tracing, prev > 0
+                if name not in self._aux and prev > 0:
+                    primary_fresh += d
+                    culprits.append(f"{name}(+{d})")
+            self._last[name] = size
+        self.total_compiles += fresh
+        if primary_fresh == 0:
+            self._zero_streak += 1
+            if self._zero_streak >= self.steady_after:
+                self.steady = True
+        else:
+            self._zero_streak = 0
+            if self.steady:
+                self.steady_retraces += primary_fresh
+                self.warn_fn(
+                    "steady-state engine tick recompiled: "
+                    + ", ".join(culprits)
+                    + " — a fixed-shape decode tick should never retrace "
+                    "(shape or static-arg drift?)"
+                )
+        return fresh
+
+    def snapshot(self) -> dict:
+        return {
+            "active": self.active,
+            "total_compiles": self.total_compiles,
+            "steady": self.steady,
+            "steady_retraces": self.steady_retraces,
+            "per_fn": dict(self._last),
+        }

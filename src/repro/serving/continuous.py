@@ -71,6 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, PagedKVConfig
+from repro.core.gating import summarize_routing
 from repro.models.model import (
     arch_fully_paged,
     init_caches,
@@ -84,6 +85,7 @@ from repro.models.model import (
     prefill_into_slot,
     ragged_decode_step,
 )
+from repro.obs import Obs
 from repro.serving.engine import Request, Response
 from repro.serving.kv_pool import BlockTables, KVBlockPool
 from repro.serving.prefix_index import PrefixIndex
@@ -185,7 +187,8 @@ class ContinuousEngine:
                  paged: bool = False, page_size: Optional[int] = None,
                  n_pages: Optional[int] = None, prefix_sharing: bool = False,
                  prefill_chunk: int = 0, prefill_mode: str = "chunked",
-                 paged_cfg: Optional[PagedKVConfig] = None):
+                 paged_cfg: Optional[PagedKVConfig] = None,
+                 obs: Optional[Obs] = None):
         if paged_cfg is not None:
             # bundled form of the same knobs (configs.base.PagedKVConfig);
             # mixing it with the loose kwargs would silently shadow them
@@ -285,10 +288,51 @@ class ContinuousEngine:
         self._key = jax.random.PRNGKey(seed)
         self._cur_token = np.zeros((slots,), np.int32)
 
+        # -- observability ------------------------------------------------
+        # Default Obs(): metrics on (they ARE the per-tick telemetry source,
+        # ~µs/tick), tracer off (no-op fast path), routing collection off
+        # (it changes the decode step's jitted return signature, so it is an
+        # explicit opt-in at construction).  Obs.disabled() = all-off
+        # benchmark baseline for the <1%-overhead guard.
+        self.obs = obs if obs is not None else Obs()
+        # hoisted enabled-check: the hot path tests one attribute, not three
+        self._tr = self.obs.tracer if self.obs.tracer.enabled else None
+        M = self.obs.metrics
+        self._h_queue = M.histogram("serve.queue_wait_s")
+        self._h_ttft = M.histogram("serve.ttft_s")
+        self._h_tpot = M.histogram("serve.tpot_s", lo=1e-5, hi=10.0)
+        self._h_tick = M.histogram("serve.tick_s")
+        self._h_preempts = M.histogram("serve.preempts_per_req", unit="",
+                                       lo=1.0, hi=1024.0, n_buckets=10)
+        self._c_submitted = M.counter("serve.requests_submitted", unit="req")
+        self._c_completed = M.counter("serve.requests_completed", unit="req")
+        self._c_decode_toks = M.counter("serve.decode_tokens", unit="tok")
+        self._c_prefill_toks = M.counter("serve.prefill_tokens_computed", unit="tok")
+        self._c_prefill_skip = M.counter("serve.prefill_tokens_skipped", unit="tok")
+        self._c_preempt = M.counter("serve.preemptions")
+        self._c_cow = M.counter("serve.cow_copies", unit="page")
+        self._c_prefix_hits = M.counter("serve.prefix_hits")
+        self._c_prefix_toks = M.counter("serve.prefix_hit_tokens", unit="tok")
+        self._c_retraces = M.counter("serve.retraces", unit="compile")
+        self._g_active = M.gauge("serve.active_slots")
+        self._g_queue = M.gauge("serve.queue_depth")
+        self._g_free_pages = M.gauge("serve.free_pages")
+        self._g_occupancy = M.gauge("serve.page_occupancy")
+        self._g_peak_occ = M.gauge("serve.peak_page_occupancy")
+        self._g_shared = M.gauge("serve.shared_pages")
+        self._g_r_drop = M.gauge("routing.dropped_frac")
+        self._g_r_ent = M.gauge("routing.entropy", unit="nat")
+        self._g_r_imb = M.gauge("routing.imbalance")
+        # per-request SLO state: t_submit/t_admit/t_first/t_last/n_tokens/
+        # preempts; popped into histograms at completion
+        self._req_obs: Dict[int, dict] = {}
+        routing = self.obs.routing
+
         if paged:
             def _step(params, tokens, positions, active, caches, tables):
                 return paged_ragged_decode_step(
-                    cfg, params, tokens, positions, active, caches, tables
+                    cfg, params, tokens, positions, active, caches, tables,
+                    return_routing=routing,
                 )
 
             self._decode = jax.jit(_step, donate_argnums=(4,))
@@ -332,7 +376,8 @@ class ContinuousEngine:
             )
         else:
             def _step(params, tokens, positions, active, caches):
-                return ragged_decode_step(cfg, params, tokens, positions, active, caches)
+                return ragged_decode_step(cfg, params, tokens, positions, active, caches,
+                                          return_routing=routing)
 
             self._decode = jax.jit(_step, donate_argnums=(4,))
 
@@ -341,6 +386,94 @@ class ContinuousEngine:
                 return prefill_into_slot(cfg, params, tokens, positions, slot, caches)
 
             self._prefill = jax.jit(_prefill_one, donate_argnums=(4,))
+
+        # retrace watchdog over every jitted function the tick can invoke —
+        # a steady-state decode tick that recompiles is a serving bug
+        wd = self.obs.watchdog
+        wd.register("decode", self._decode)
+        # aux: these legitimately compile late (novel prompt/chunk lengths,
+        # first page-reset/CoW) — counted, but no steady-state warning
+        wd.register("prefill", self._prefill, aux=True)
+        if paged:
+            wd.register("prefill_chunk_first", self._prefill_chunk_first, aux=True)
+            wd.register("prefill_chunk_cont", self._prefill_chunk_cont, aux=True)
+            wd.register("reset_pages", self._reset_pages, aux=True)
+            wd.register("copy_page", self._copy_page, aux=True)
+            wd.register("copy_slot", self._copy_slot, aux=True)
+
+    # -- request-lifecycle observability hooks -------------------------
+    # Span taxonomy (docs/OBSERVABILITY.md): track ("request", rid) carries
+    # queued -> prefill -> decode spans (preempted / prefix_hit / complete
+    # instants); track ("slot", i) carries an occupancy span per admission
+    # with nested prefill-chunk spans; track ("engine", 0) carries tick
+    # spans plus cow_copy / preempt / retrace instants.
+
+    def _obs_submitted(self, rid: int) -> None:
+        self._c_submitted.inc()
+        self._req_obs[rid] = {
+            "t_submit": time.perf_counter(), "t_admit": None, "t_first": None,
+            "t_last": None, "n_tokens": 0, "preempts": 0,
+        }
+        if self._tr:
+            self._tr.begin(("request", rid), "queued")
+
+    def _obs_admitted(self, rid: int, i: int) -> None:
+        now = time.perf_counter()
+        ro = self._req_obs.get(rid)
+        if ro is not None and ro["t_admit"] is None:
+            ro["t_admit"] = now
+            self._h_queue.observe(now - ro["t_submit"])
+        if self._tr:
+            self._tr.end(("request", rid), ts=now)  # queued
+            self._tr.begin(("request", rid), "prefill", ts=now)
+            self._tr.begin(("slot", i), f"req{rid}", ts=now)
+
+    def _obs_admitted_fork(self, rid: int, i: int, base_rid: int) -> None:
+        now = time.perf_counter()
+        ro = self._req_obs.get(rid)
+        if ro is not None and ro["t_admit"] is None:
+            ro["t_admit"] = now
+            self._h_queue.observe(now - ro["t_submit"])
+        if self._tr:
+            self._tr.end(("request", rid), ts=now)  # queued
+            self._tr.instant(("request", rid), "prefix_hit", ts=now,
+                             args={"fork_of": base_rid})
+            self._tr.begin(("request", rid), "decode", ts=now)
+            self._tr.begin(("slot", i), f"req{rid}", ts=now)
+
+    def _obs_token(self, rid: int, now: float) -> None:
+        """One generated token: TTFT on the first, TPOT on the rest.  TPOT
+        intervals broken by a preemption are dropped (t_last is reset) — the
+        re-queue wait is preemption cost, not inter-token latency."""
+        ro = self._req_obs.get(rid)
+        if ro is None:
+            return
+        if ro["t_first"] is None:
+            ro["t_first"] = now
+            self._h_ttft.observe(now - ro["t_submit"])
+        elif ro["t_last"] is not None:
+            self._h_tpot.observe(now - ro["t_last"])
+        ro["t_last"] = now
+        ro["n_tokens"] += 1
+
+    def _obs_first_token(self, rid: int) -> None:
+        """Prefill finished and the first token was sampled: flip the
+        request track from its prefill span to a decode span."""
+        now = time.perf_counter()
+        self._obs_token(rid, now)
+        if self._tr:
+            self._tr.end(("request", rid), ts=now)  # prefill
+            self._tr.begin(("request", rid), "decode", ts=now)
+
+    def _obs_completed(self, rid: int) -> None:
+        now = time.perf_counter()
+        ro = self._req_obs.pop(rid, None)
+        if ro is not None:
+            self._c_completed.inc()
+            self._h_preempts.observe(ro["preempts"])
+        if self._tr:
+            self._tr.end(("request", rid), ts=now)  # decode
+            self._tr.instant(("request", rid), "complete", ts=now)
 
     # ------------------------------------------------------------------
     def _clamped_budget(self, req: Request) -> int:
@@ -357,6 +490,7 @@ class ContinuousEngine:
             rid=rid, prompt=list(req.prompt), budget=self._clamped_budget(req),
             generated=[], prompt_len=len(req.prompt),
         ))
+        self._obs_submitted(rid)
         self._admit()
         return rid
 
@@ -382,6 +516,7 @@ class ContinuousEngine:
                 fork_of=rids[0] if j else -1,
             ))
             rids.append(rid)
+            self._obs_submitted(rid)
         self._admit()
         return rids
 
@@ -422,6 +557,7 @@ class ContinuousEngine:
         stashed prefill logits.  Zero new pages, zero prefill compute; the
         first divergent append copy-on-writes the boundary page."""
         base = self.slots[b]
+        self._obs_admitted_fork(item.rid, i, base.request_id)
         pages = [int(p) for p in self.tables.row(b) if p >= 0]
         self.pool.share(pages, owner=i)
         self.tables.copy_row(i, b)
@@ -442,6 +578,9 @@ class ContinuousEngine:
         self._cur_token[i] = first
         self.prefix_hits += 1
         self.prefix_hit_tokens += base.pos
+        self._c_prefix_hits.inc()
+        self._c_prefix_toks.inc(base.pos)
+        self._obs_token(item.rid, time.perf_counter())
         self._finish_if_done(i)
 
     def _admit(self) -> None:
@@ -490,8 +629,14 @@ class ContinuousEngine:
                     self.pool.share(shared, owner=i)
                     self.prefix_hits += 1
                     self.prefix_hit_tokens += len(shared) * self.page_size
+                    self._c_prefix_hits.inc()
+                    self._c_prefix_toks.inc(len(shared) * self.page_size)
+                    if self._tr:
+                        self._tr.instant(("request", item.rid), "prefix_hit",
+                                         args={"tokens": len(shared) * self.page_size})
                 self.tables.append(i, shared + fresh)
             self.queue.pop(0)
+            self._obs_admitted(item.rid, i)
             if self.paged and self.prefill_mode == "chunked":
                 # resumable admission: pages are reserved, compute is spread
                 # over ticks.  On fully-paged archs shared-prefix positions
@@ -500,6 +645,7 @@ class ContinuousEngine:
                 # (state rebuild) but still never write the shared pages.
                 start = len(shared) * self.page_size if self._skip_shared_compute else 0
                 self.prefill_tokens_skipped += start
+                self._c_prefill_skip.inc(start)
                 self.slots[i] = SlotState(
                     request_id=item.rid, pos=start, generated=list(item.generated),
                     budget=item.budget, active=True, admit_seq=self._admit_counter,
@@ -526,6 +672,7 @@ class ContinuousEngine:
                     self.params, toks, pos, jnp.asarray(i, jnp.int32), self.caches
                 )
             self.prefill_tokens_total += len(ctx)
+            self._c_prefill_toks.inc(len(ctx))
             self._key, sub = jax.random.split(self._key)
             first = int(sample(logits, sub, temperature=self.temperature,
                                top_k=self.top_k, top_p=self.top_p)[0])
@@ -538,6 +685,7 @@ class ContinuousEngine:
             )
             self._admit_counter += 1
             self._cur_token[i] = first
+            self._obs_first_token(item.rid)
             if self.prefix is not None:
                 # register this context's full pages (shared entries are
                 # already indexed and keep their mapping; fresh full pages
@@ -583,14 +731,20 @@ class ContinuousEngine:
             toks = jnp.asarray(np.asarray(ctx[start:end], np.int32)[None])
             pos = jnp.arange(start, end, dtype=jnp.int32)[None]
             fn = self._prefill_chunk_cont if slot.prefill_started else self._prefill_chunk_first
+            if self._tr:
+                self._tr.begin(("slot", i), f"chunk[{start}:{end})",
+                               args={"rid": slot.request_id})
             logits, self.caches = fn(
                 self.params, toks, pos, jnp.asarray(i, jnp.int32), self.caches,
                 jnp.asarray(self.tables.row(i)),
             )
+            if self._tr:
+                self._tr.end(("slot", i))
             slot.prefill_started = True
             n = end - start
             done += n
             self.prefill_tokens_total += n
+            self._c_prefill_toks.inc(n)
             if local_budget is None:
                 self._tick_budget -= n
             else:
@@ -612,6 +766,7 @@ class ContinuousEngine:
                 slot.generated = slot.generated + [first]
                 slot.prefill_logits = np.asarray(logits) if self.prefix is not None else None
                 self._cur_token[i] = first
+                self._obs_first_token(slot.request_id)
                 self._finish_if_done(i)
                 if self.queue:
                     # a fork blocked on THIS slot's prefill can now share it
@@ -642,6 +797,8 @@ class ContinuousEngine:
         return done
 
     def _release_slot(self, i: int) -> None:
+        if self._tr:
+            self._tr.end(("slot", i))  # occupancy span opened at admission
         if self.paged:
             # decref everything the slot holds; only pages whose refcount hit
             # zero are actually freed — pages another slot still references
@@ -668,6 +825,7 @@ class ContinuousEngine:
             if hit_eos:
                 gen = gen[:-1]
             self.done[slot.request_id] = Response(tokens=gen, prompt_len=slot.prompt_len)
+            self._obs_completed(slot.request_id)
             self._release_slot(i)
             self._admit()
 
@@ -676,12 +834,25 @@ class ContinuousEngine:
         request resumes later by re-prefilling prompt + generated-so-far, so
         greedy decoding continues token-exact."""
         slot = self.slots[i]
+        rid = slot.request_id
         self.queue.insert(0, _Pending(
-            rid=slot.request_id, prompt=slot.prompt, budget=slot.budget,
+            rid=rid, prompt=slot.prompt, budget=slot.budget,
             generated=slot.generated, prompt_len=slot.prompt_len,
         ))
+        ro = self._req_obs.get(rid)
+        if ro is not None:
+            ro["preempts"] += 1
+            ro["t_last"] = None  # don't count re-queue wait as TPOT
+        if self._tr:
+            now = time.perf_counter()
+            self._tr.instant(("request", rid), "preempted", ts=now)
+            self._tr.end(("request", rid), ts=now)  # decode (or prefill) span
+            self._tr.begin(("request", rid), "queued", ts=now)
+            self._tr.instant(("engine", 0), "preempt", ts=now,
+                             args={"rid": rid, "slot": i})
         self._release_slot(i)
         self.preemptions += 1
+        self._c_preempt.inc()
 
     def _youngest_active(self) -> int:
         return max(
@@ -739,6 +910,10 @@ class ContinuousEngine:
                 )
                 self.tables.set_entry(i, entry, new)
                 self.cow_copies += 1
+                self._c_cow.inc()
+                if self._tr:
+                    self._tr.instant(("engine", 0), "cow_copy",
+                                     args={"slot": i, "src": page, "dst": new})
 
     # ------------------------------------------------------------------
     def step(self) -> int:
@@ -750,6 +925,9 @@ class ContinuousEngine:
         ``metrics_log`` (active slots, prefill/decode token counts,
         free/shared pages, CoW copies, tok/s, preemptions)."""
         t0 = time.perf_counter()
+        if self._tr:
+            self._tr.begin(("engine", 0), "tick", ts=t0,
+                           args={"tick": self._tick + 1})
         if self.paged and self.prefill_mode == "chunked":
             # bounded head-of-line blocking: decode (below) runs every tick,
             # delayed by at most this one chunk of prefill compute — the
@@ -760,6 +938,8 @@ class ContinuousEngine:
             self._admit()
             if not any(s.active for s in self.slots):
                 self._end_tick_prefill()
+                if self._tr:
+                    self._tr.end(("engine", 0))
                 return 0
         if self._tick_budget is not None:
             self._prefill_tick()
@@ -770,28 +950,42 @@ class ContinuousEngine:
         # writes land in the trash page, never in a half-written prompt page
         decoding = np.asarray([s.active and not s.prefilling for s in self.slots])
         n_active = int(sum(s.active for s in self.slots))
+        ran_prefill = (self._tick_budget is not None
+                       and self._tick_budget < self.prefill_chunk)
+        if ran_prefill:
+            # fence the async chunk writes so the prefill/decode timer split
+            # attributes device time to the phase that spent it
+            jax.block_until_ready(self.caches)
+        t_mid = time.perf_counter()
         if not decoding.any():
             prefill_toks = self._end_tick_prefill()
             if n_active or prefill_toks:
-                self._record_metrics(0, time.perf_counter() - t0, prefill_toks,
-                                     n_active)
+                self._record_metrics(0, t_mid - t0, prefill_toks, n_active,
+                                     prefill_s=t_mid - t0)
+            if self._tr:
+                self._tr.end(("engine", 0))
             return n_active
         positions = np.asarray([s.pos if s.active else 0 for s in self.slots], np.int32)
         tokens = jnp.asarray(self._cur_token[:, None])
         if self.paged:
             tbl = np.where(decoding[:, None], self.tables.table, -1)
-            logits, self.caches = self._decode(
+            out = self._decode(
                 self.params, tokens, jnp.asarray(positions), jnp.asarray(decoding),
                 self.caches, jnp.asarray(tbl),
             )
         else:
-            logits, self.caches = self._decode(
+            out = self._decode(
                 self.params, tokens, jnp.asarray(positions), jnp.asarray(decoding), self.caches
             )
+        if self.obs.routing:
+            logits, self.caches, routing_tree = out
+        else:
+            (logits, self.caches), routing_tree = out, None
         self._key, sub = jax.random.split(self._key)
         nxt = np.asarray(sample(logits, sub, temperature=self.temperature,
                                 top_k=self.top_k, top_p=self.top_p))
         n_decoded = int(decoding.sum())
+        t_tok = time.perf_counter()
         for i, slot in enumerate(self.slots):
             # Gate on the PRE-decode snapshot, not slot.active: a completion
             # at row < i can trigger _admit into free row i mid-loop, and
@@ -805,26 +999,69 @@ class ContinuousEngine:
             # BEFORE the base's first decode tick — drop the dead copy
             slot.prefill_logits = None
             self._cur_token[i] = int(nxt[i])
+            self._obs_token(slot.request_id, t_tok)
             self._finish_if_done(i)
         prefill_toks = self._end_tick_prefill()
-        self._record_metrics(n_decoded, time.perf_counter() - t0, prefill_toks,
-                             n_active)
+        # fetching nxt blocked on the logits, but the donated cache updates
+        # are still in flight — without this fence the recorded tick latency
+        # under-reports the device time the tick actually consumed
+        jax.block_until_ready(self.caches)
+        t1 = time.perf_counter()
+        routing_m = summarize_routing(routing_tree) if routing_tree else None
+        self._record_metrics(n_decoded, t1 - t0, prefill_toks, n_active,
+                             prefill_s=t_mid - t0, decode_s=t1 - t_mid,
+                             routing=routing_m)
+        if self._tr:
+            self._tr.end(("engine", 0), ts=t1, args={"decoded": n_decoded})
         return n_active
 
     def _record_metrics(self, n_decoded: int, dt: float, prefill_toks: int = 0,
-                        n_active: Optional[int] = None) -> None:
+                        n_active: Optional[int] = None, *,
+                        prefill_s: float = 0.0, decode_s: Optional[float] = None,
+                        routing: Optional[dict] = None) -> None:
+        retraces = self.obs.watchdog.tick()
+        if retraces:
+            self._c_retraces.inc(retraces)
+            if self._tr and self.obs.watchdog.steady_retraces:
+                self._tr.instant(("engine", 0), "retrace",
+                                 args={"compiles": retraces})
         self._tick += 1
+        self._h_tick.observe(dt)
+        if n_decoded:
+            self._c_decode_toks.inc(n_decoded)
+        active = n_decoded if n_active is None else n_active
+        self._g_active.set(active)
+        self._g_queue.set(len(self.queue))
         m = {
             "tick": self._tick,
             # all slots holding pages, INCLUDING mid-prefill ones; the decode
             # participation count is tokens_this_tick
-            "active_slots": n_decoded if n_active is None else n_active,
+            "active_slots": active,
             "queue_depth": len(self.queue),
             "tokens_this_tick": n_decoded,
             "tok_per_s": round(n_decoded / max(dt, 1e-9), 2),
+            "tick_s": round(dt, 6),
+            # decode throughput over the decode phase only (the legacy
+            # tok_per_s divides by the WHOLE tick, prefill included)
+            "decode_tok_per_s": round(n_decoded / max(decode_s, 1e-9), 2)
+            if decode_s is not None else 0.0,
+            "prefill_tok_per_s": round(prefill_toks / max(prefill_s, 1e-9), 2)
+            if prefill_toks else 0.0,
+            "retraces": retraces,
             "preemptions": self.preemptions,
         }
+        if routing is not None:
+            self._g_r_drop.set(routing["dropped_frac"])
+            self._g_r_ent.set(routing["entropy"])
+            self._g_r_imb.set(routing["imbalance"])
+            m["routing"] = {k: routing[k] for k in
+                            ("moe_layers", "dropped_frac", "entropy", "imbalance")}
         if self.paged:
+            self._g_free_pages.set(self.pool.free_count)
+            occ = self.pool.occupancy
+            self._g_occupancy.set(round(occ, 4))
+            self._g_peak_occ.set(round(max(occ, self._g_peak_occ.value or 0.0), 4))
+            self._g_shared.set(self.pool.shared_count)
             m["prefill_tokens"] = prefill_toks
             m["free_pages"] = self.pool.free_count
             m["page_occupancy"] = round(self.pool.occupancy, 4)

@@ -14,6 +14,7 @@ The paper's design goals map as:
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass
 from functools import partial
 from typing import List, Optional, Sequence
@@ -23,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.gating import summarize_routing
 from repro.models.model import decode_step, encode, init_caches, prefill
 from repro.serving.sampling import sample
 
@@ -68,7 +70,8 @@ class Engine:
     (MoQ serving, paper §4: expert bytes shrink ~4x/8x with int8/int4).
     """
 
-    def __init__(self, cfg: ModelConfig, params, ec: EngineConfig, *, memory=None, prefix_embeds=None):
+    def __init__(self, cfg: ModelConfig, params, ec: EngineConfig, *, memory=None,
+                 prefix_embeds=None, obs=None):
         self.cfg = cfg
         from repro.quant import prepare_params_for_serving
 
@@ -82,15 +85,42 @@ class Engine:
         self._capacity = capacity
         cross_len = memory.shape[1] if memory is not None else 0
 
+        from repro.obs import Obs
+
+        # same default contract as ContinuousEngine: metrics on, tracer off,
+        # routing collection off (it changes the decode step's signature)
+        self.obs = obs if obs is not None else Obs()
+        self._tr = self.obs.tracer if self.obs.tracer.enabled else None
+        routing = self.obs.routing
+        M = self.obs.metrics
+        self._h_prefill = M.histogram("serve.batch_prefill_s")
+        self._h_step = M.histogram("serve.decode_step_s", lo=1e-5, hi=10.0)
+        self._c_decode_toks = M.counter("serve.decode_tokens", unit="tok")
+        self._c_completed = M.counter("serve.requests_completed", unit="req")
+        self._c_retraces = M.counter("serve.retraces", unit="compile")
+        self._g_r_drop = M.gauge("routing.dropped_frac")
+        self._g_r_ent = M.gauge("routing.entropy", unit="nat")
+        self._g_r_imb = M.gauge("routing.imbalance")
+        # per-layer routing summary of the most recent decode step
+        # (summarize_routing dict) when obs.routing is on
+        self.last_routing = None
+
         def _prefill(params, tokens, caches, memory, prefix_embeds):
             return prefill(cfg, params, tokens, caches, memory=memory, prefix_embeds=prefix_embeds)
 
         def _decode(params, token, index, caches, memory):
-            return decode_step(cfg, params, token, index, caches, memory=memory)
+            return decode_step(cfg, params, token, index, caches, memory=memory,
+                               return_routing=routing)
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
         self._cross_len = cross_len
+        # both aux: the static engine legitimately compiles once per batch
+        # shape (B, prompt length), so the never-retrace-after-warmup
+        # contract belongs to ContinuousEngine's fixed-shape tick only;
+        # compiles are still counted into serve.retraces
+        self.obs.watchdog.register("decode", self._decode, aux=True)
+        self.obs.watchdog.register("prefill", self._prefill, aux=True)
 
     def _make_caches(self, batch: int):
         return init_caches(
@@ -122,9 +152,20 @@ class Engine:
             toks[i, S - len(p) :] = p
 
         caches = self._make_caches(B)
+        tr = self._tr
+        t0 = time.perf_counter()
+        if tr:
+            tr.begin(("engine", 0), "prefill", ts=t0,
+                     args={"batch": B, "prompt_len": S})
         logits, caches = self._prefill(
             self.params, jnp.asarray(toks), caches, self.memory, self.prefix_embeds
         )
+        if self.obs.metrics.enabled or tr:
+            jax.block_until_ready(logits)
+            t1 = time.perf_counter()
+            self._h_prefill.observe(t1 - t0)
+            if tr:
+                tr.end(("engine", 0), ts=t1)
         offset = (
             self.cfg.frontend.n_tokens if (cfg.frontend is not None and cfg.family == "vlm") else 0
         )
@@ -133,16 +174,39 @@ class Engine:
         generated = np.zeros((B, max_new), np.int32)
         done = np.zeros((B,), bool)
         cur = sample(logits, key, temperature=ec.temperature, top_k=ec.top_k, top_p=ec.top_p)
+        if tr:
+            tr.begin(("engine", 0), "decode", args={"batch": B})
+        t_prev = time.perf_counter()
         for t in range(max_new):
-            generated[:, t] = np.asarray(cur)
+            generated[:, t] = np.asarray(cur)  # blocks on the in-flight step
+            now = time.perf_counter()
+            if t:  # step t-1's device time ended at this sync point
+                self._h_step.observe(now - t_prev)
+            t_prev = now
+            self._c_decode_toks.inc(int((~done).sum()))
             done |= generated[:, t] == ec.eos_id
             if done.all():
                 generated = generated[:, : t + 1]
                 break
             key, sub = jax.random.split(key)
             idx = jnp.asarray(S + offset + t, jnp.int32)
-            logits, caches = self._decode(self.params, cur[:, None], idx, caches, self.memory)
+            out = self._decode(self.params, cur[:, None], idx, caches, self.memory)
+            if self.obs.routing:
+                logits, caches, routing_tree = out
+                self.last_routing = summarize_routing(routing_tree) if routing_tree else None
+                if self.last_routing:
+                    self._g_r_drop.set(self.last_routing["dropped_frac"])
+                    self._g_r_ent.set(self.last_routing["entropy"])
+                    self._g_r_imb.set(self.last_routing["imbalance"])
+            else:
+                logits, caches = out
+            fresh = self.obs.watchdog.tick()
+            if fresh:
+                self._c_retraces.inc(fresh)
             cur = sample(logits, sub, temperature=ec.temperature, top_k=ec.top_k, top_p=ec.top_p)
+        if tr:
+            tr.end(("engine", 0))
+        self._c_completed.inc(B)
 
         res = []
         for i, r in enumerate(reqs):

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.gating import summarize_routing
 from repro.models.model import forward, init_params
 from repro.training.optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
 from repro.training.schedule import warmup_cosine
@@ -31,13 +32,28 @@ def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
     return jnp.mean(logz - gold)
 
 
-def loss_fn(cfg: ModelConfig, params, tokens, labels, *, remat: bool = False, memory=None, prefix_embeds=None):
-    logits, aux = forward(cfg, params, tokens, remat=remat, memory=memory, prefix_embeds=prefix_embeds)
+def loss_fn(cfg: ModelConfig, params, tokens, labels, *, remat: bool = False,
+            memory=None, prefix_embeds=None, return_routing: bool = False):
+    """``return_routing=True`` (static) adds a ``"routing"`` entry to the aux
+    metrics: the per-layer RoutingStats tree from the forward pass (same
+    gating decisions the aux loss is built from — telemetry cannot drift
+    from the loss)."""
+    routing = None
+    if return_routing:
+        logits, aux, routing = forward(
+            cfg, params, tokens, remat=remat, memory=memory,
+            prefix_embeds=prefix_embeds, return_routing=True,
+        )
+    else:
+        logits, aux = forward(cfg, params, tokens, remat=remat, memory=memory, prefix_embeds=prefix_embeds)
     if prefix_embeds is not None:
         logits = logits[:, prefix_embeds.shape[1] :]
     ce = cross_entropy(logits, labels)
     loss = ce + moe_aux_coef(cfg) * aux
-    return loss, {"ce": ce, "aux": aux}
+    metrics = {"ce": ce, "aux": aux}
+    if return_routing:
+        metrics["routing"] = routing
+    return loss, metrics
 
 
 @dataclass
@@ -51,12 +67,14 @@ class TrainConfig:
     remat: bool = False
 
 
-def make_train_step(cfg: ModelConfig, tc: TrainConfig) -> Callable:
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, *, with_routing: bool = False) -> Callable:
     opt = AdamWConfig(lr=tc.lr, weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
 
     def train_step(params, opt_state: AdamWState, tokens, labels):
         (loss, metrics), grads = jax.value_and_grad(
-            lambda p: loss_fn(cfg, p, tokens, labels, remat=tc.remat), has_aux=True
+            lambda p: loss_fn(cfg, p, tokens, labels, remat=tc.remat,
+                              return_routing=with_routing),
+            has_aux=True,
         )(params)
         lr_scale = warmup_cosine(
             opt_state.step, warmup_steps=tc.warmup_steps, decay_steps=tc.decay_steps, min_ratio=tc.min_lr_ratio
@@ -78,22 +96,44 @@ def train_loop(
     params=None,
     log_every: int = 10,
     log_fn=print,
+    routing_stats: bool = False,
+    metrics_sink: Optional[Callable[[dict], None]] = None,
 ):
-    """Returns (params, opt_state, history)."""
+    """Returns (params, opt_state, history).
+
+    ``routing_stats=True`` collects per-layer MoE routing telemetry in the
+    jitted train step (RoutingStats — dropped-token fraction, gate entropy,
+    f·P imbalance, per-expert token counts) and folds the host-side summary
+    into the periodic log line and ``history`` rows.  ``metrics_sink``, if
+    given, receives every logged row as a structured dict (floats + the
+    routing summary) — the machine-readable twin of ``log_fn``."""
     if params is None:
         params = init_params(cfg, jax.random.PRNGKey(seed))
     opt_state = init_adamw(params)
-    step_fn = jax.jit(make_train_step(cfg, tc))
+    step_fn = jax.jit(make_train_step(cfg, tc, with_routing=routing_stats))
     history = []
     t0 = time.time()
     for step in range(num_steps):
         tokens, labels = next(data_iter)
         params, opt_state, metrics = step_fn(params, opt_state, tokens, labels)
         if step % log_every == 0 or step == num_steps - 1:
+            routing = metrics.pop("routing", None)
             m = {k: float(v) for k, v in metrics.items()}
-            history.append({"step": step, **m})
-            log_fn(
+            row = {"step": step, **m}
+            line = (
                 f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
-                f"aux {m['aux']:.4f} gnorm {m['grad_norm']:.3f} ({time.time()-t0:.1f}s)"
+                f"aux {m['aux']:.4f} gnorm {m['grad_norm']:.3f}"
             )
+            if routing:
+                summ = summarize_routing(routing)
+                row["routing"] = summ
+                line += (
+                    f" drop {summ['dropped_frac']:.3f} "
+                    f"imb {summ['imbalance']:.3f} ent {summ['entropy']:.3f}"
+                )
+            line += f" ({time.time()-t0:.1f}s)"
+            history.append(row)
+            log_fn(line)
+            if metrics_sink is not None:
+                metrics_sink(row)
     return params, opt_state, history

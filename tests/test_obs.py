@@ -1,0 +1,508 @@
+"""Observability layer (src/repro/obs/): histogram percentile math, tracer
+nesting + Chrome trace_event schema, SLO accounting through a hand-scheduled
+two-request run, routing-stats parity with ``load_balance_stats`` under jit,
+and the retrace watchdog's steady-state contract."""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gating import (
+    load_balance_stats,
+    routing_stats,
+    summarize_routing,
+    top_k_gating,
+)
+from repro.core.prmoe import nlg_moe
+from repro.models.model import forward, init_params
+from repro.obs import MetricsRegistry, Obs, RetraceWatchdog, Tracer, jit_cache_size
+from repro.obs.metrics import Histogram
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Engine, EngineConfig, Request
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = nlg_moe("obs-test", 2, 64, 2, 8, vocab=128).replace(
+        param_dtype="float32", compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Histogram percentile math
+# ---------------------------------------------------------------------------
+
+
+class TestHistogram:
+    def _bucket_ratio(self, h: Histogram) -> float:
+        """One bucket's geometric width — the percentile error bound."""
+        return (h.hi / h.lo) ** (1.0 / (len(h.counts) - 2))
+
+    @pytest.mark.parametrize("q", [0.5, 0.9, 0.95, 0.99])
+    def test_uniform_within_bucket_error(self, q):
+        h = Histogram("t", lo=1e-3, hi=10.0, n_buckets=64)
+        xs = np.linspace(0.01, 1.0, 20_000)
+        for v in xs:
+            h.observe(float(v))
+        true = float(np.quantile(xs, q))
+        est = h.percentile(q)
+        r = self._bucket_ratio(h)
+        assert true / r <= est <= true * r, (q, est, true, r)
+
+    @pytest.mark.parametrize("q", [0.5, 0.9, 0.99])
+    def test_exponential_within_bucket_error(self, q):
+        h = Histogram("t", lo=1e-4, hi=100.0, n_buckets=64)
+        xs = np.random.default_rng(0).exponential(scale=0.05, size=50_000)
+        for v in xs:
+            h.observe(float(v))
+        true = float(np.quantile(xs, q))
+        est = h.percentile(q)
+        r = self._bucket_ratio(h)
+        assert true / r <= est <= true * r, (q, est, true, r)
+
+    def test_percentiles_monotone_and_clamped(self):
+        h = Histogram("t", lo=1e-3, hi=1.0, n_buckets=16)
+        # values straddling underflow and overflow buckets
+        for v in (0.0, 1e-5, 0.01, 0.2, 5.0, 40.0):
+            h.observe(v)
+        ps = [h.percentile(q) for q in (0.0, 0.25, 0.5, 0.75, 0.99, 1.0)]
+        assert all(a <= b + 1e-12 for a, b in zip(ps, ps[1:])), ps
+        assert all(h.min_seen <= p <= h.max_seen for p in ps), ps
+
+    def test_exact_aggregates_and_edge_cases(self):
+        h = Histogram("t", lo=1e-3, hi=1.0, n_buckets=8)
+        assert math.isnan(h.percentile(0.5)) and math.isnan(h.mean)
+        h.observe(0.25)
+        assert h.percentile(0.99) == 0.25  # single sample -> the sample
+        h.observe(0.75)
+        assert h.count == 2 and h.total == pytest.approx(1.0)
+        assert h.mean == pytest.approx(0.5)
+        assert h.min_seen == 0.25 and h.max_seen == 0.75
+
+    def test_snapshot_schema(self):
+        h = Histogram("t", unit="s")
+        assert h.snapshot() == {"count": 0, "unit": "s"}
+        h.observe(0.1)
+        snap = h.snapshot()
+        for k in ("count", "sum", "mean", "min", "max", "p50", "p95", "p99"):
+            assert k in snap
+
+
+# ---------------------------------------------------------------------------
+# Tracer: nesting + export schema
+# ---------------------------------------------------------------------------
+
+
+def _span_stacks_balanced(events):
+    depth = {}
+    for e in events:
+        if e["ph"] == "B":
+            depth[(e["pid"], e["tid"])] = depth.get((e["pid"], e["tid"]), 0) + 1
+        elif e["ph"] == "E":
+            k = (e["pid"], e["tid"])
+            depth[k] = depth.get(k, 0) - 1
+            assert depth[k] >= 0, "E without matching B"
+    return all(v == 0 for v in depth.values())
+
+
+class TestTracer:
+    def test_nesting_lifo(self):
+        tr = Tracer()
+        tr.begin(("engine", 0), "outer")
+        tr.begin(("engine", 0), "inner")
+        tr.end(("engine", 0))
+        tr.end(("engine", 0))
+        evs = [e for e in tr.trace_events() if e["ph"] in "BE"]
+        assert [e["name"] for e in evs] == ["outer", "inner", "inner", "outer"]
+        assert _span_stacks_balanced(evs)
+
+    def test_close_open_at_export(self):
+        tr = Tracer()
+        tr.begin(("slot", 1), "decode")
+        evs = tr.trace_events(close_open=True)
+        assert _span_stacks_balanced([e for e in evs if e["ph"] in "BE"])
+        # the live tracer still considers the span open
+        tr.end(("slot", 1))
+        assert _span_stacks_balanced(
+            [e for e in tr.trace_events(close_open=False) if e["ph"] in "BE"])
+
+    def test_export_schema(self, tmp_path):
+        tr = Tracer()
+        with tr.span(("engine", 0), "tick", args={"n": 1}):
+            tr.instant(("request", 7), "preempted")
+        tr.end(("engine", 0))  # stray end tolerated
+        path = tmp_path / "trace.json"
+        n = tr.export(str(path))
+        doc = json.loads(path.read_text())
+        assert set(doc) == {"traceEvents", "displayTimeUnit"}
+        assert len(doc["traceEvents"]) == n
+        for e in doc["traceEvents"]:
+            assert e["ph"] in ("B", "E", "i", "M")
+            assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+            if e["ph"] != "M":
+                assert e["ts"] >= 0
+        # metadata names both track groups
+        meta = {e["args"]["name"] for e in doc["traceEvents"] if e["ph"] == "M"
+                and e["name"] == "process_name"}
+        assert meta == {"engine", "request"}
+
+    def test_timestamps_monotone_per_span(self):
+        tr = Tracer()
+        tr.begin(("engine", 0), "s", ts=5.0)
+        tr.end(("engine", 0), ts=1.0)  # out-of-order ts is clamped
+        b, e = [ev for ev in tr.trace_events() if ev["ph"] in "BE"]
+        assert e["ts"] >= b["ts"]
+
+    def test_disabled_is_noop(self):
+        tr = Tracer(enabled=False)
+        tr.begin(("engine", 0), "s")
+        tr.instant(("engine", 0), "i")
+        tr.end(("engine", 0))
+        assert tr.n_events == 0 and tr.trace_events() == []
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_reset_all_in_place(self):
+        M = MetricsRegistry()
+        c, g, h = M.counter("c"), M.gauge("g"), M.histogram("h")
+        c.inc(3), g.set(1.5), h.observe(0.1)
+        M.reset_all()
+        # same objects (engines hold direct references), zeroed state
+        assert M.counter("c") is c and c.value == 0
+        assert M.gauge("g") is g and g.value is None
+        assert M.histogram("h") is h and h.count == 0
+
+    def test_disabled_registry_discards(self):
+        M = MetricsRegistry(enabled=False)
+        M.counter("c").inc(5)
+        assert M.counter("c").value == 0  # fresh throwaway each get
+        assert M.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+
+    def test_snapshot_render_jsonl_agree(self, tmp_path):
+        M = MetricsRegistry()
+        M.counter("serve.reqs").inc(2)
+        M.gauge("serve.depth").set(3)
+        M.histogram("serve.lat_s").observe(0.5)
+        path = tmp_path / "m.jsonl"
+        M.write_jsonl(str(path), extra={"run": "t"})
+        row = json.loads(path.read_text())
+        assert row["run"] == "t"
+        snap = M.snapshot()
+        assert row["counters"] == snap["counters"]
+        assert row["histograms"] == snap["histograms"]
+        out = M.render()
+        assert "serve.reqs=2" in out and "serve.lat_s" in out
+
+
+# ---------------------------------------------------------------------------
+# SLO accounting: hand-scheduled two requests through one slot
+# ---------------------------------------------------------------------------
+
+
+class TestSLOAccounting:
+    def test_two_requests_one_slot(self, setup):
+        """slots=1 forces request 2 to queue behind request 1's full service:
+        queue-wait, TTFT, and TPOT histograms must account every request and
+        every decoded token exactly."""
+        cfg, params = setup
+        obs = Obs(trace=True)
+        eng = ContinuousEngine(cfg, params, slots=1, capacity=64, obs=obs)
+        prompt = list(range(1, 9))
+        n_new = 4
+        r1 = eng.submit(Request(prompt=prompt, max_new_tokens=n_new))
+        r2 = eng.submit(Request(prompt=prompt[::-1], max_new_tokens=n_new))
+        for _ in range(64):  # hand-stepped, bounded
+            eng.step()
+            if r1 in eng.done and r2 in eng.done:
+                break
+        assert len(eng.done[r1].tokens) == n_new
+        assert len(eng.done[r2].tokens) == n_new
+
+        M = obs.metrics
+        assert M.counter("serve.requests_submitted").value == 2
+        assert M.counter("serve.requests_completed").value == 2
+        # each request's first token comes off the prefill logits, so decode
+        # ticks account for the remaining n_new - 1 tokens per request
+        assert M.counter("serve.decode_tokens").value == 2 * (n_new - 1)
+
+        q = M.histogram("serve.queue_wait_s")
+        ttft = M.histogram("serve.ttft_s")
+        tpot = M.histogram("serve.tpot_s")
+        assert q.count == 2 and ttft.count == 2
+        # every decoded token is TTFT or TPOT, never both
+        assert tpot.count == 2 * n_new - 2
+        assert ttft.min_seen > 0 and tpot.min_seen > 0
+        # r1 is admitted on the first tick (waits ~µs); r2 waits out r1's
+        # entire service (>= n_new jitted decode ticks), orders of magnitude
+        # longer — and never longer than the whole hand-stepped run
+        assert q.max_seen > 10 * q.min_seen
+        # r2's TTFT >= its own prefill; every wait is positive and finite
+        assert math.isfinite(q.max_seen) and math.isfinite(ttft.max_seen)
+        pre = M.histogram("serve.preempts_per_req")
+        assert pre.count == 2 and pre.max_seen == 0  # no preemptions occurred
+
+        # lifecycle spans: each request shows queued -> prefill -> decode,
+        # balanced, with a complete instant
+        evs = obs.tracer.trace_events(close_open=False)
+        assert _span_stacks_balanced([e for e in evs if e["ph"] in "BE"])
+        req_names = [e["name"] for e in evs
+                     if e.get("cat") == "request" and e["ph"] == "B"]
+        assert req_names.count("queued") == 2
+        assert req_names.count("prefill") == 2
+        assert req_names.count("decode") == 2
+        completes = [e for e in evs if e["ph"] == "i" and e["name"] == "complete"]
+        assert len(completes) == 2
+
+    def test_preemption_accounting_and_trace(self, setup):
+        """An oversubscribed pool preempts the youngest slot: the request's
+        span stack must re-enter ``queued`` cleanly, preempts land in the
+        per-request histogram, and broken TPOT intervals are dropped rather
+        than misreported."""
+        cfg, params = setup
+        obs = Obs(trace=True)
+        eng = ContinuousEngine(cfg, params, slots=3, capacity=32, paged=True,
+                               page_size=4, n_pages=8, obs=obs)
+        rids = [eng.submit(Request(prompt=[i + 1] * 6, max_new_tokens=8))
+                for i in range(3)]
+        done = eng.run_until_done()
+        assert all(len(done[r].tokens) == 8 for r in rids)
+        M = obs.metrics
+        n_pre = M.counter("serve.preemptions").value
+        assert n_pre >= 1  # the pool really was too small
+        pre = M.histogram("serve.preempts_per_req")
+        assert pre.count == 3 and pre.max_seen >= 1
+        # queue-wait observes FIRST admission only — re-admissions after a
+        # preemption must not double-count
+        assert M.histogram("serve.queue_wait_s").count == 3
+        # each preemption breaks one inter-token interval (dropped from TPOT)
+        total = sum(len(done[r].tokens) for r in rids)
+        assert M.histogram("serve.tpot_s").count <= total - 3
+        evs = obs.tracer.trace_events(close_open=False)
+        assert _span_stacks_balanced([e for e in evs if e["ph"] in "BE"])
+        preempted = [e for e in evs if e["ph"] == "i" and e["name"] == "preempted"]
+        assert len(preempted) == n_pre
+        # a preempted request re-enters queued before decoding again
+        req_b = [e["name"] for e in evs if e.get("cat") == "request"
+                 and e["ph"] == "B"]
+        assert req_b.count("queued") == 3 + n_pre
+
+    def test_tick_histogram_counts_ticks(self, setup):
+        cfg, params = setup
+        obs = Obs()
+        eng = ContinuousEngine(cfg, params, slots=2, capacity=32, obs=obs)
+        eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=3))
+        eng.run_until_done()
+        h = obs.metrics.histogram("serve.tick_s")
+        assert h.count == len(eng.metrics_log)  # one observation per tick
+        assert h.min_seen > 0
+
+
+# ---------------------------------------------------------------------------
+# Routing stats: parity with load_balance_stats under jit
+# ---------------------------------------------------------------------------
+
+
+class TestRoutingStats:
+    def test_parity_with_load_balance_stats_under_jit(self):
+        T, E, k, cap = 64, 8, 2, 24
+
+        @jax.jit
+        def both(logits):
+            g = top_k_gating(logits, k, cap)
+            return routing_stats(g, E), load_balance_stats(g.probs, g.expert_idx, E)
+
+        logits = jax.random.normal(jax.random.PRNGKey(3), (T, E))
+        rs, (f, p) = both(logits)
+        # f/P inside RoutingStats ARE load_balance_stats — exact, not approx
+        np.testing.assert_array_equal(np.asarray(rs.f), np.asarray(f))
+        np.testing.assert_array_equal(np.asarray(rs.p), np.asarray(p))
+        np.testing.assert_allclose(
+            float(rs.imbalance), E * float(jnp.sum(f * p)), rtol=1e-6)
+
+    def test_token_accounting(self):
+        T, E, k = 32, 4, 1
+        cap = 6  # tight capacity -> guaranteed drops for a skewed router
+        logits = jnp.zeros((T, E)).at[:, 0].add(5.0)  # everyone wants expert 0
+        g = top_k_gating(logits, k, cap)
+        rs = routing_stats(g, E)
+        kept = int(np.asarray(rs.tokens_per_expert).sum())
+        assert kept == int(np.asarray(g.keep).sum())
+        np.testing.assert_allclose(
+            float(rs.dropped_frac), 1.0 - kept / (T * k), rtol=1e-6)
+        assert float(rs.dropped_frac) > 0  # capacity really did bind
+
+    def test_entropy_bounds(self):
+        T, E = 64, 8
+        g_uni = top_k_gating(jnp.zeros((T, E)), 1, T)
+        assert float(routing_stats(g_uni, E).entropy) == pytest.approx(
+            math.log(E), rel=1e-5)
+        skew = jnp.zeros((T, E)).at[:, 0].add(100.0)
+        g_skew = top_k_gating(skew, 1, T)
+        assert float(routing_stats(g_skew, E).entropy) < 0.05
+
+    def test_forward_routing_does_not_change_logits(self, setup):
+        cfg, params = setup
+        toks = jax.random.randint(jax.random.PRNGKey(5), (2, 12), 0, cfg.vocab_size)
+        lg0, aux0 = forward(cfg, params, toks)
+        lg1, aux1, routing = forward(cfg, params, toks, return_routing=True)
+        np.testing.assert_array_equal(np.asarray(lg0), np.asarray(lg1))
+        np.testing.assert_array_equal(np.asarray(aux0), np.asarray(aux1))
+        summ = summarize_routing(routing)
+        assert summ["moe_layers"] == 1  # 2 layers, every other FFN is MoE
+        (layer,) = summ["per_layer"].values()
+        assert len(layer["tokens_per_expert"]) == 8
+        assert isinstance(summ["dropped_frac"], float)
+
+
+# ---------------------------------------------------------------------------
+# Retrace watchdog
+# ---------------------------------------------------------------------------
+
+
+class _FakeJit:
+    """Stands in for a jitted callable: _cache_size() is the trace-cache."""
+
+    def __init__(self):
+        self.n = 0
+
+    def _cache_size(self):
+        return self.n
+
+
+class TestRetraceWatchdog:
+    def test_steady_state_warning_fires_for_primary_only(self):
+        warns = []
+        wd = RetraceWatchdog(steady_after=2, warn_fn=warns.append)
+        dec, pre = _FakeJit(), _FakeJit()
+        wd.register("decode", dec)
+        wd.register("prefill", pre, aux=True)
+
+        dec.n = 1  # warmup compile
+        assert wd.tick() == 1 and not warns and not wd.steady
+        assert wd.tick() == 0
+        assert wd.tick() == 0 and wd.steady
+        pre.n = 1  # aux compile after steady: counted, never warned
+        assert wd.tick() == 1
+        assert not warns and wd.steady_retraces == 0 and wd.steady
+        dec.n = 2  # primary retrace after steady: the bug this exists for
+        assert wd.tick() == 1
+        assert len(warns) == 1 and "decode(+1)" in warns[0]
+        assert wd.steady_retraces == 1
+        assert wd.total_compiles == 3
+        snap = wd.snapshot()
+        assert snap["steady_retraces"] == 1 and snap["per_fn"]["decode"] == 2
+
+    def test_late_first_compile_is_warmup_not_retrace(self):
+        """All slots can spend the early ticks in chunked prefill, so the
+        decode fn's first compile may land AFTER the zero-compile streak
+        declared the engine steady — that is warmup, not a retrace."""
+        warns = []
+        wd = RetraceWatchdog(steady_after=2, warn_fn=warns.append)
+        dec = _FakeJit()
+        wd.register("decode", dec)
+        wd.tick(), wd.tick(), wd.tick()
+        assert wd.steady
+        dec.n = 1  # first-ever compile, post-steady
+        assert wd.tick() == 1
+        assert not warns and wd.steady_retraces == 0
+        dec.n = 2  # now a genuine retrace
+        wd.tick()
+        assert len(warns) == 1 and wd.steady_retraces == 1
+
+    def test_jit_cache_size_real_jit(self):
+        f = jax.jit(lambda x: x + 1)
+        n0 = jit_cache_size(f)
+        if n0 is None:
+            pytest.skip("this jax does not expose _cache_size")
+        f(jnp.ones((2,)))
+        assert jit_cache_size(f) == n0 + 1
+        f(jnp.ones((2,)))  # cache hit
+        assert jit_cache_size(f) == n0 + 1
+        f(jnp.ones((3,)))  # new shape -> retrace
+        assert jit_cache_size(f) == n0 + 2
+
+    def test_inactive_without_cache_accessor(self):
+        wd = RetraceWatchdog()
+        wd.register("f", object())
+        assert wd.tick() == 0
+        assert wd.active is False
+
+    def test_engine_steady_state_zero_retrace_regression(self, setup):
+        """A full continuous-batching run — staggered admissions, chunked
+        prefill, completions — must never retrace the decode tick after
+        steady state.  This is the regression the watchdog exists to catch."""
+        cfg, params = setup
+        obs = Obs()
+        eng = ContinuousEngine(cfg, params, slots=2, capacity=64, paged=True,
+                               page_size=8, obs=obs)
+        eng.submit(Request(prompt=list(range(1, 9)), max_new_tokens=10))
+        for _ in range(12):
+            eng.step()
+        eng.submit(Request(prompt=list(range(9, 29)), max_new_tokens=6))
+        eng.run_until_done()
+        snap = obs.watchdog.snapshot()
+        assert snap["active"] and snap["steady"]
+        assert snap["steady_retraces"] == 0
+        assert obs.metrics.counter("serve.retraces").value == snap["total_compiles"]
+
+
+# ---------------------------------------------------------------------------
+# Engine + trainer smoke: telemetry on, results unchanged
+# ---------------------------------------------------------------------------
+
+
+class TestIntegration:
+    def test_static_engine_obs_parity(self, setup):
+        cfg, params = setup
+        reqs = [Request(prompt=[1, 2, 3, 4], max_new_tokens=4),
+                Request(prompt=[5, 6, 7], max_new_tokens=4)]
+        ec = EngineConfig(max_batch=2, max_prefill=8, max_decode=4)
+        base = Engine(cfg, params, ec, obs=Obs.disabled()).generate(reqs)
+        obs = Obs(routing=True)
+        eng = Engine(cfg, params, ec, obs=obs)
+        out = eng.generate(reqs)
+        # telemetry must not perturb greedy decoding
+        assert [r.tokens for r in out] == [r.tokens for r in base]
+        assert obs.metrics.histogram("serve.batch_prefill_s").count == 1
+        assert obs.metrics.histogram("serve.decode_step_s").count > 0
+        assert obs.metrics.counter("serve.decode_tokens").value == 8
+        assert eng.last_routing is not None and eng.last_routing["moe_layers"] == 1
+        assert obs.metrics.gauge("routing.entropy").value is not None
+
+    def test_continuous_engine_routing_metrics(self, setup):
+        cfg, params = setup
+        obs = Obs(routing=True)
+        eng = ContinuousEngine(cfg, params, slots=2, capacity=32, obs=obs)
+        eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+        eng.run_until_done()
+        m = eng.last_metrics
+        assert "routing" in m and m["routing"]["moe_layers"] == 1
+        assert obs.metrics.gauge("routing.dropped_frac").value is not None
+
+    def test_trainer_routing_in_history_and_sink(self, setup):
+        from repro.data.pipeline import data_stream
+        from repro.training.trainer import TrainConfig, train_loop
+
+        cfg, _ = setup
+        rows = []
+        _, _, history = train_loop(
+            cfg, TrainConfig(lr=1e-3, warmup_steps=1, decay_steps=4),
+            data_stream(cfg.vocab_size, 2, 16), num_steps=2,
+            log_every=1, log_fn=lambda s: None,
+            routing_stats=True, metrics_sink=rows.append,
+        )
+        assert rows == history and len(history) == 2
+        for row in history:
+            r = row["routing"]
+            assert set(r) >= {"moe_layers", "dropped_frac", "entropy",
+                              "imbalance", "per_layer"}
+            assert r["moe_layers"] == 1
