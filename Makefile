@@ -1,7 +1,10 @@
-.PHONY: test test-quant test-paged test-prefix test-chunked test-obs test-dist bench-quant bench-kv bench-paged bench-prefix bench-chunked bench-obs
+.PHONY: test analyze test-quant test-paged test-prefix test-chunked test-obs test-dist bench-quant bench-kv bench-paged bench-prefix bench-chunked bench-obs
 
 test:
 	sh scripts/ci.sh
+
+analyze:
+	PYTHONPATH=src python -m repro.launch.analyze
 
 test-quant:
 	PYTHONPATH=src python -m pytest -q tests/test_quant.py tests/test_kv_quant.py

@@ -667,6 +667,22 @@ def obs() -> None:
          f"warmup_compiles={wd['total_compiles']},steady={wd['steady']},"
          f"steady_retraces={wd['steady_retraces']}(must_be_0)")
 
+    # the static contract checker (repro.analysis) must predict exactly the
+    # compiles the watchdog observed — the trace-time and runtime halves of
+    # the instrument agreeing on the number
+    from repro.analysis import Workload, predict_compiles
+
+    ticks = 6 + 5 * 8 + 1  # warmup + measurement rounds + the routing tick
+    pred = predict_compiles(
+        slots=slots, capacity=capacity, page_size=ps,
+        prefill_chunk=full.prefill_chunk,
+        workload=Workload(tuple(len(p) for p in prompts),
+                          capacity - 20, ticks))
+    observed = {k: v for k, v in wd["per_fn"].items() if k in pred}
+    assert observed == pred, (observed, pred)
+    emit("obs_predicted_compiles", float(sum(pred.values())),
+         "static_contract_prediction==watchdog_observation")
+
     print("# obs_metrics_json:", json.dumps({
         "config": {"slots": slots, "capacity": capacity, "page_size": ps},
         "tick_overhead_default_vs_disabled": overhead,

@@ -9,6 +9,14 @@ set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
+# static-analysis gate: host-sync/tracer lint over src/repro, compile-shape
+# contract + closure + compile-count prediction, donation/aliasing audit of
+# every jitted engine fn, and the jaxpr graph audit (collectives, dtype
+# drift, capacity dead-compute) on the reduced glm4 + gemma3 engines.
+# Trace-time only — no device execution — so it runs first as the cheapest
+# whole-stack signal.
+python -m repro.launch.analyze
+
 python -m pytest -q tests/test_quant.py tests/test_kv_quant.py
 
 # paged serving stage: block-pool allocator, page-gather kernel vs ref,

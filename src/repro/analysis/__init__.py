@@ -1,0 +1,54 @@
+"""Trace-time static analysis for the serving stack.
+
+Four passes, one report format (``findings.Report``), one CLI
+(``launch/analyze.py`` / ``make analyze``):
+
+  * :mod:`repro.analysis.contracts` — compile-shape contract checker
+    (declared signature families abstract-trace, close under reachable
+    scheduler states, and predict the exact compile count the retrace
+    watchdog will observe).
+  * :mod:`repro.analysis.donation`  — donation/aliasing auditor (every
+    ``donate_argnums`` leaf produced an input-output alias in the lowered
+    module; donated references are rebound, never read, host-side).
+  * :mod:`repro.analysis.lint`      — AST host-sync / tracer-leak lint over
+    ``src/repro`` with ``# analysis: allow(...)`` pragmas.
+  * :mod:`repro.analysis.graph`     — jaxpr graph auditor (stray
+    collectives, int8/int4->f32 dtype drift, capacity-padding dead compute).
+
+See docs/ANALYSIS.md for rules, severities, and the contract <-> watchdog
+relationship.
+"""
+from repro.analysis.findings import Finding, Report, SEVERITIES
+from repro.analysis.contracts import (
+    ContractEntry,
+    Workload,
+    check_contract,
+    check_closure,
+    chunk_lengths,
+    predict_compiles,
+    reachable_chunk_lengths,
+)
+from repro.analysis.donation import (
+    audit_donation,
+    audit_donated_rebinds,
+    leaf_positions,
+)
+from repro.analysis.lint import LintConfig, lint_source, lint_tree, RULES
+from repro.analysis.graph import (
+    audit_collectives,
+    audit_dead_compute,
+    audit_dtype_drift,
+    audit_graph,
+    capacity_dead_compute,
+    iter_eqns,
+)
+
+__all__ = [
+    "Finding", "Report", "SEVERITIES",
+    "ContractEntry", "Workload", "check_contract", "check_closure",
+    "chunk_lengths", "predict_compiles", "reachable_chunk_lengths",
+    "audit_donation", "audit_donated_rebinds", "leaf_positions",
+    "LintConfig", "lint_source", "lint_tree", "RULES",
+    "audit_collectives", "audit_dead_compute", "audit_dtype_drift",
+    "audit_graph", "capacity_dead_compute", "iter_eqns",
+]

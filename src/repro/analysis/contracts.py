@@ -1,0 +1,317 @@
+"""Compile-shape contract checker.
+
+A serving engine is only viable under XLA if the set of (shape, dtype)
+signatures its jitted functions are called with is CLOSED and SMALL: the
+decode tick must have exactly one signature (never retraces in steady
+state), and admission prefill may compile once per distinct chunk length
+drawn from a bounded, page-aligned family.  PR 6's retrace watchdog observes
+violations at runtime — after the compile has already burned a tick.  This
+pass proves the property ahead of time from the engine's *declared*
+contract (``ContinuousEngine.shape_contract()`` / ``Engine.shape_contract()``,
+derived from the same config values that size the real buffers):
+
+  1. **trace check** — every declared signature abstract-traces
+     (``jax.eval_shape``; no compile, no device work), and for donating
+     functions every donated input leaf has a shape/dtype-matching output
+     leaf (the necessary condition for XLA to honor the donation — the
+     authoritative per-leaf alias audit is ``analysis.donation``).
+  2. **closure check** — signatures reachable from scheduler states
+     (chunk boundaries +-1 around every prompt length, preemption replays
+     that grow the context by generated tokens, fork admissions) stay inside
+     the declared family, and every non-final chunk length is page-aligned
+     (unaligned chunks are exactly the compile-churn bug the chunked-prefill
+     scheduler defers sub-page budgets to avoid).
+  3. **compile-count prediction** — a host-side replay of the scheduler's
+     admission arithmetic (same chunk splitting as
+     ``ContinuousEngine._advance_prefill``) yields the exact per-function
+     compile counts a workload will pay.  ``tests/test_analysis.py`` and
+     ``benchmarks/run.py obs`` hold this prediction equal to the retrace
+     watchdog's observed ``per_fn`` counts — the static and runtime halves
+     of the same instrument agreeing on the number.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis.findings import Report
+
+
+@dataclass
+class ContractEntry:
+    """One jitted function's declared signature family.
+
+    ``points`` is the closed domain (tuples of family parameters — e.g.
+    ``(chunk_len,)``); ``sample`` the representative points that get
+    abstract-traced (boundaries, page-multiples +-1).  ``primary`` marks
+    steady-state functions (the watchdog's non-aux class): their family must
+    be a singleton — a primary function with more than one admissible
+    signature is an open compile set by construction."""
+
+    name: str
+    fn: Callable
+    make: Callable[..., tuple]  # (*point) -> positional args (SDS pytrees)
+    points: Tuple[tuple, ...]
+    sample: Tuple[tuple, ...]
+    primary: bool = False
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _aval_multiset(tree) -> Dict[Tuple, int]:
+    out: Dict[Tuple, int] = {}
+    for leaf in jax.tree.leaves(tree):
+        key = (tuple(leaf.shape), str(leaf.dtype))
+        out[key] = out.get(key, 0) + 1
+    return out
+
+
+def check_contract(entries: Sequence[ContractEntry],
+                   report: Optional[Report] = None) -> Report:
+    """Pass 1: primary-singleton + abstract-trace + donation feasibility."""
+    report = report if report is not None else Report()
+    total_sigs = 0
+    for e in entries:
+        total_sigs += len(e.points)
+        if e.primary and len(e.points) != 1:
+            report.add(
+                "contract-open", "error", e.name,
+                f"steady-state function declares {len(e.points)} admissible "
+                "signatures — the fixed-shape tick contract requires exactly "
+                "one (every extra signature is a steady-state retrace)",
+            )
+        for pt in e.sample:
+            args = e.make(*pt)
+            try:
+                out = jax.eval_shape(e.fn, *args)
+            except Exception as exc:
+                report.add(
+                    "contract-trace-failed", "error", f"{e.name}{pt}",
+                    f"declared signature does not trace: {exc!r}".replace("\n", " ")[:300],
+                )
+                continue
+            for argnum in e.donate_argnums:
+                donated = _aval_multiset(args[argnum])
+                outputs = _aval_multiset(out)
+                short = {k: n for k, n in donated.items()
+                         if outputs.get(k, 0) < n}
+                if short:
+                    k, n = next(iter(short.items()))
+                    report.add(
+                        "contract-donation-infeasible", "error", f"{e.name}{pt}",
+                        f"donated arg {argnum} has {n} leaf(s) of aval {k} but "
+                        f"only {outputs.get(k, 0)} matching output leaf(s) — "
+                        "XLA cannot alias this donation",
+                    )
+    report.metrics["contract.functions"] = len(entries)
+    report.metrics["contract.declared_signatures"] = total_sigs
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Chunk arithmetic (mirrors ContinuousEngine._advance_prefill)
+# ---------------------------------------------------------------------------
+
+
+def chunk_lengths(ctx_len: int, start: int, budget: int, page_size: int) -> List[int]:
+    """Chunk lengths one uninterrupted application of ``budget`` tokens emits
+    for a context of ``ctx_len`` beginning at page-aligned ``start`` — the
+    same alignment rules as the scheduler: a non-final chunk ends on a page
+    boundary, and leftover budget smaller than a page defers."""
+    out: List[int] = []
+    pos = start
+    left = budget
+    while pos < ctx_len and left > 0:
+        end = min(ctx_len, pos + left)
+        if end < ctx_len:
+            end -= end % page_size
+            if end <= pos:
+                break  # sub-page leftover defers to the next tick
+        out.append(end - pos)
+        left -= end - pos
+        pos = end
+    return out
+
+
+@dataclass
+class Workload:
+    """The scenario the prediction replays: ``prompt_lens`` submitted
+    upfront in order, each decoding ``max_new`` tokens, the engine stepped
+    ``ticks`` times.  ``forks`` > 0 marks the first request as a
+    ``submit_n(req, forks + 1)`` parallel-sample base."""
+
+    prompt_lens: Sequence[int]
+    max_new: int
+    ticks: int
+    forks: int = 0
+
+
+def reachable_chunk_lengths(capacity: int, page_size: int, prefill_chunk: int,
+                            workload: Workload, *, perturb: int = 1,
+                            preempt_generated: Iterable[int] = (0, 1)) -> set:
+    """Every chunk length any reachable scheduler state can emit: prompt
+    lengths +-``perturb``, preemption replays (context grows by generated
+    tokens), all page-aligned resume starts, all partial tick budgets."""
+    keep = capacity - max(1, min(workload.max_new, capacity - 1))
+    ctxs = set()
+    for p in workload.prompt_lens:
+        for d in range(-perturb, perturb + 1):
+            for g in list(preempt_generated) + [workload.max_new]:
+                ctxs.add(min(max(1, p + d) + g, max(keep, 1), capacity))
+    out = set()
+    for ctx in ctxs:
+        for start in range(0, ctx, page_size):
+            for budget in (page_size, prefill_chunk, max(1, prefill_chunk // 2)):
+                out.update(chunk_lengths(ctx, start, budget, page_size))
+    return out
+
+
+def check_closure(entries: Sequence[ContractEntry], *, capacity: int,
+                  page_size: int, prefill_chunk: int, workload: Workload,
+                  report: Optional[Report] = None) -> Report:
+    """Pass 2: reachable signatures stay inside the declared family."""
+    report = report if report is not None else Report()
+    reach = reachable_chunk_lengths(capacity, page_size, prefill_chunk, workload)
+    declared = {e.name: {pt[0] for pt in e.points} for e in entries
+                if e.name in ("prefill_chunk_first", "prefill_chunk_cont")}
+    for name, domain in declared.items():
+        escaped = sorted(reach - domain)
+        if escaped:
+            report.add(
+                "contract-escape", "error", name,
+                f"reachable chunk lengths {escaped[:8]} are outside the "
+                f"declared family (|domain|={len(domain)}) — each escape is "
+                "an unplanned compilation",
+            )
+    bad_align = sorted(l for l in reach
+                       if l > page_size and l % page_size and l != max(reach))
+    # non-final chunks must be page multiples; the only unaligned length a
+    # context can emit is its own final remainder, which is <= prefill_chunk
+    over = sorted(l for l in reach if l > prefill_chunk or l <= 0)
+    if over:
+        report.add("contract-escape", "error", "chunk-budget",
+                   f"reachable chunk lengths {over[:8]} exceed the per-tick "
+                   f"budget {prefill_chunk}")
+    report.metrics["contract.reachable_chunk_lengths"] = len(reach)
+    report.metrics["contract.unaligned_reachable"] = len(bad_align)
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Compile-count prediction (host-side scheduler replay)
+# ---------------------------------------------------------------------------
+
+
+def predict_compiles(*, slots: int, capacity: int, page_size: int,
+                     prefill_chunk: int, workload: Workload,
+                     prefill_mode: str = "chunked",
+                     skip_shared_compute: bool = True) -> Dict[str, int]:
+    """Per-function compile counts the workload will pay, by replaying the
+    scheduler's admission/decode arithmetic host-side (no tracing, no
+    device).  Keys match the engine's jit registry / the retrace watchdog's
+    ``per_fn`` snapshot; ``tests/test_analysis.py`` and the obs benchmark
+    assert exact agreement with the observed counts.
+
+    Scope (documented, asserted by the callers): requests submitted upfront,
+    pool provisioned so the replayed workload never preempts, no prefix
+    overlap between distinct prompts.  Forks model ``submit_n``: the base
+    admits normally, each fork shares its pages (one ``copy_slot``
+    signature) and CoWs its boundary page at the first divergent append
+    (one ``copy_page`` signature)."""
+    budget_tokens = max(1, min(workload.max_new, capacity - 1))
+    keep = capacity - budget_tokens
+
+    first_lens: set = set()
+    cont_lens: set = set()
+    scatter_sigs: set = set()
+
+    class Slot:
+        def __init__(self, ctx):
+            self.ctx = ctx
+            self.done = 0
+            self.generated = 0
+            self.started = False
+            self.prefilling = True
+
+    queue: List[int] = [min(max(p, 1), max(keep, 1)) for p in workload.prompt_lens]
+    forks_waiting = workload.forks
+    active: List[Slot] = []
+    completions = 0
+    fork_admitted = 0
+    cow_events = 0
+    decode_ran = False
+
+    def advance(s: Slot, budget: int) -> int:
+        spent = 0
+        for n in chunk_lengths(s.ctx, s.done, budget, page_size):
+            (cont_lens if s.started else first_lens).add(n)
+            s.started = True
+            s.done += n
+            spent += n
+        if s.done >= s.ctx:
+            s.prefilling = False
+            s.generated = 1  # last-chunk logits seed the first token
+        return spent
+
+    def admit(budget: Optional[int]) -> int:
+        """Admit from the queue head into free slots; returns budget spent."""
+        nonlocal fork_admitted
+        spent = 0
+        while queue and len(active) < slots:
+            ctx = queue.pop(0)
+            s = Slot(ctx)
+            active.append(s)
+            if prefill_mode == "chunked":
+                spent += advance(s, prefill_chunk if budget is None
+                                 else max(budget - spent, 0))
+            else:
+                scatter_sigs.add(ctx)
+                s.prefilling = False
+                s.generated = 1
+        # forks of the first request share it once it finishes prefilling
+        nonlocal forks_waiting
+        while (forks_waiting and active and not active[0].prefilling
+               and len(active) < slots):
+            f = Slot(active[0].ctx)
+            f.prefilling = False
+            f.started = True
+            f.done = f.ctx
+            f.generated = active[0].generated
+            active.append(f)
+            forks_waiting -= 1
+            fork_admitted += 1
+        return spent
+
+    admit(None)  # submit() admissions: one full chunk budget each
+    for _ in range(workload.ticks):
+        budget = prefill_chunk
+        for s in [s for s in active if s.prefilling]:
+            if budget <= 0:
+                break
+            budget -= advance(s, budget)
+        decoders = [s for s in active if not s.prefilling]
+        if decoders:
+            decode_ran = True
+            if fork_admitted and cow_events == 0:
+                cow_events = 1  # first divergent append CoWs the shared page
+            for s in decoders:
+                s.generated += 1
+        finished = [s for s in active if not s.prefilling
+                    and s.generated >= budget_tokens]
+        for s in finished:
+            active.remove(s)
+            completions += 1
+        if finished:
+            budget -= admit(budget)
+
+    out = {
+        "decode": 1 if decode_ran else 0,
+        "prefill": len(scatter_sigs),
+        "prefill_chunk_first": len(first_lens),
+        "prefill_chunk_cont": len(cont_lens),
+        "reset_pages": 1 if completions else 0,
+        "copy_slot": 1 if fork_admitted else 0,
+        "copy_page": 1 if cow_events else 0,
+    }
+    return out

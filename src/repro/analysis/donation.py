@@ -1,0 +1,212 @@
+"""Donation / aliasing auditor.
+
+``donate_argnums`` is a *request*, not a guarantee: XLA only honors it when
+a donated input buffer can actually alias some output (same shape + dtype,
+platform support).  When it silently falls through, every engine tick
+allocates a SECOND copy of the donated buffer — for the paged KV cache that
+is multiple GiB of double-allocation and a hidden copy per tick, with no
+error anywhere.  (jax emits a one-line warning at lowering time; nothing
+fails.)
+
+This pass lowers each jitted function at a representative signature and
+verifies, leaf by leaf, that every donated pytree leaf produced an
+input-output alias in the lowered module (the ``tf.aliasing_output``
+attribute StableHLO records per aliased parameter).  Abstract lowering is
+enough — no compile, no execution — so auditing the full-size serving
+graphs is cheap.
+
+A second, source-level check (``audit_donated_rebinds``) guards the host
+side of the contract: after a call to a donating function, the donated
+argument's buffer is DEAD — reading the old Python reference returns
+garbage (or raises).  The only safe shape is rebinding the same reference
+from the call's results in the same statement
+(``logits, self.caches = self._decode(..., self.caches, ...)``), which is
+exactly what the auditor requires of every call site of a registered
+donating function.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis.findings import Report
+
+_ALIAS_ATTR_RE = re.compile(r"tf\.aliasing_output\s*=\s*(\d+)")
+_ARG_RE = re.compile(r"%arg(\d+):\s*tensor<[^>]*>\s*(\{[^}]*\})?")
+
+
+def _entry_param_aliases(stablehlo_text: str) -> Dict[int, bool]:
+    """param index -> has an input-output alias, parsed from the lowered
+    module's entry function signature."""
+    m = re.search(r"func\.func\s+public\s+@main\((.*?)\)\s*->", stablehlo_text,
+                  re.DOTALL)
+    if not m:
+        return {}
+    out: Dict[int, bool] = {}
+    for am in _ARG_RE.finditer(m.group(1)):
+        idx = int(am.group(1))
+        attrs = am.group(2) or ""
+        out[idx] = "tf.aliasing_output" in attrs
+    return out
+
+
+def leaf_positions(args: Sequence, argnum: int) -> Tuple[int, List[str]]:
+    """(first flat-parameter index, leaf key-paths) of ``args[argnum]`` in
+    the jit calling convention (args flattened left to right)."""
+    before = sum(len(jax.tree.leaves(a)) for a in args[:argnum])
+    paths = [jax.tree_util.keystr(kp)
+             for kp, _ in jax.tree_util.tree_flatten_with_path(args[argnum])[0]]
+    return before, paths
+
+
+def _kept_index_map(lowered, n_flat: int) -> Dict[int, int]:
+    """flat-arg index -> entry-parameter position in the lowered module.
+
+    ``jax.jit`` defaults to ``keep_unused=False``: flat arguments the traced
+    computation never reads are PRUNED from the lowered module, shifting the
+    positions of every later parameter (e.g. an ``active``-rows mask that a
+    particular arch's decode graph happens not to consult).  The lowering
+    records which flat vars survived in ``kept_var_idx``; without this map a
+    positional alias lookup silently audits the wrong parameters."""
+    kept = None
+    try:
+        kept = lowered._lowering.compile_args.get("kept_var_idx")
+    except Exception:
+        kept = None
+    if kept is None:
+        return {i: i for i in range(n_flat)}
+    return {flat: pos for pos, flat in enumerate(sorted(kept))}
+
+
+def audit_donation(name: str, jitfn, args: Sequence, donate_argnums: Sequence[int],
+                   report: Optional[Report] = None, *,
+                   location: str = "") -> Report:
+    """Verify every donated leaf of ``jitfn`` at signature ``args`` (concrete
+    arrays or ShapeDtypeStructs) produced an alias in the lowered module.
+
+    ``donate_argnums`` is the engine's *declared* donation contract — passed
+    separately from the jit wrapper precisely so a donation dropped from the
+    ``jax.jit(...)`` call (the mutation the tests rehearse) is caught as a
+    contract violation rather than silently re-shrinking the check."""
+    report = report if report is not None else Report()
+    loc = location or name
+    try:
+        lowered = jitfn.lower(*args)
+        text = lowered.as_text()
+    except Exception as e:  # lowering itself failing is its own finding
+        report.add("donation-lower-failed", "error", loc,
+                   f"could not lower for donation audit: {e!r}")
+        return report
+    aliases = _entry_param_aliases(text)
+    if not aliases:
+        report.add("donation-unparsed", "error", loc,
+                   "could not parse entry parameters from lowered module")
+        return report
+    n_flat = len(jax.tree.leaves(list(args)))
+    kept = _kept_index_map(lowered, n_flat)
+    if len(kept) != len(aliases):
+        report.add("donation-unparsed", "error", loc,
+                   f"lowered module has {len(aliases)} entry parameters but "
+                   f"the lowering kept {len(kept)} of {n_flat} flat args — "
+                   "cannot map donated leaves to parameters")
+        return report
+    n_aliased_total = sum(aliases.values())
+    n_declared = 0
+    for argnum in donate_argnums:
+        start, paths = leaf_positions(args, argnum)
+        n_declared += len(paths)
+        # a donated leaf pruned as unused (not in `kept`) cannot alias: the
+        # matching output is a fresh buffer — report it as dropped too
+        missing = [paths[i] for i in range(len(paths))
+                   if not aliases.get(kept.get(start + i, -1), False)]
+        if missing:
+            shown = ", ".join(missing[:4]) + ("..." if len(missing) > 4 else "")
+            report.add(
+                "donation-dropped", "error", loc,
+                f"declared donation of arg {argnum} produced no input-output "
+                f"alias for {len(missing)}/{len(paths)} leaves ({shown}) — "
+                "each unaliased leaf double-allocates per call",
+            )
+    report.metrics[f"donation.{name}.aliased"] = f"{n_aliased_total}/{n_declared}"
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Host-side read-after-donation (AST over the engine source)
+# ---------------------------------------------------------------------------
+
+
+def _expr_text(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return "<expr>"
+
+
+def audit_donated_rebinds(source: str, relpath: str,
+                          donated: Dict[str, int],
+                          report: Optional[Report] = None) -> Report:
+    """``donated`` maps a method attribute name (e.g. ``_decode``) to the
+    donated positional-arg index.  Every call ``self.<fn>(...)`` must appear
+    as the RHS of an assignment whose targets rebind the donated argument
+    expression (``self.caches = ... self._decode(..., self.caches, ...)``);
+    anything else leaves a live Python reference to a dead buffer."""
+    report = report if report is not None else Report()
+    tree = ast.parse(source, filename=relpath)
+
+    class V(ast.NodeVisitor):
+        def _targets_of(self, node: ast.AST) -> List[str]:
+            out: List[str] = []
+            parent = getattr(node, "_parent_assign", None)
+            if parent is None:
+                return out
+
+            def collect(t):
+                if isinstance(t, (ast.Tuple, ast.List)):
+                    for e in t.elts:
+                        collect(e)
+                else:
+                    out.append(_expr_text(t))
+
+            for t in parent.targets:
+                collect(t)
+            return out
+
+        def visit_Assign(self, node: ast.Assign) -> None:
+            for sub in ast.walk(node.value):
+                sub._parent_assign = node
+            self.generic_visit(node)
+
+        def visit_Call(self, node: ast.Call) -> None:
+            name = None
+            if isinstance(node.func, ast.Attribute) and \
+                    isinstance(node.func.value, ast.Name) and \
+                    node.func.value.id == "self":
+                name = node.func.attr
+            if name in donated:
+                argnum = donated[name]
+                if argnum >= len(node.args):
+                    report.add("donation-arity", "error",
+                               f"{relpath}:{node.lineno}",
+                               f"self.{name} called with fewer than "
+                               f"{argnum + 1} positional args")
+                else:
+                    arg_txt = _expr_text(node.args[argnum])
+                    targets = self._targets_of(node)
+                    if arg_txt not in targets:
+                        report.add(
+                            "donation-host-read", "error",
+                            f"{relpath}:{node.lineno}",
+                            f"donated arg `{arg_txt}` of self.{name} is not "
+                            "rebound by the call's assignment targets "
+                            f"({targets or 'no assignment'}) — the old "
+                            "reference is a dead buffer after the call",
+                        )
+            self.generic_visit(node)
+
+    V().visit(tree)
+    return report

@@ -1,0 +1,224 @@
+"""Trace-time static analysis gate (`make analyze`, ci.sh `analyze` stage).
+
+Runs the four `repro.analysis` passes over the serving engines — before
+anything executes on a device — and turns the findings into an exit code:
+
+  1. host-sync / tracer-leak lint over the whole ``src/repro`` tree;
+  2. compile-shape contract check for the continuous (paged + prefix-sharing
+     + chunked-prefill) and static engines of each ``--arch``: every
+     declared signature abstract-traces, the chunk family is closed under
+     reachable scheduler states, and the predicted compile count is reported
+     (the number the PR 6 retrace watchdog verifies at runtime — see
+     ``benchmarks/run.py obs``);
+  3. donation/aliasing audit: every ``donate_argnums`` leaf of every jitted
+     engine function produced an input-output alias in the lowered module,
+     and every donating call site rebinds the donated reference;
+  4. graph audit of the decode/prefill graphs: no collectives in
+     single-device serving graphs, no int8/int4 -> f32 dequant upcasts, and
+     the capacity-padding dead-compute fraction for MoE archs (info).
+
+Exit 0 = no unsuppressed errors (``--strict``: no warnings either).
+
+  PYTHONPATH=src python -m repro.launch.analyze                 # glm4 + gemma3
+  PYTHONPATH=src python -m repro.launch.analyze --arch nlg-350m-moe128
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional, Sequence
+
+import jax
+
+from repro.analysis import (
+    Report,
+    Workload,
+    audit_donation,
+    audit_donated_rebinds,
+    audit_graph,
+    check_closure,
+    check_contract,
+    lint_tree,
+    predict_compiles,
+)
+from repro.configs.registry import get_config, make_reduced
+from repro.models.model import init_params
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Engine, EngineConfig
+
+DEFAULT_ARCHS = ("glm4-9b", "gemma3-27b")
+
+# the scenario the contract's closure/prediction passes replay: mixed prompt
+# lengths (page-aligned, odd, sub-page, exactly one chunk budget)
+_WORKLOAD = Workload(prompt_lens=(16, 33, 7, 64), max_new=8, ticks=24)
+
+
+def _moe_ffn(cfg):
+    for seg in cfg.segments:
+        for ls in seg.pattern:
+            if getattr(ls.ffn, "num_experts", 0):
+                return ls.ffn
+    return None
+
+
+def _moe_spec(cfg, num_tokens: int) -> Optional[dict]:
+    f = _moe_ffn(cfg)
+    if f is None:
+        return None
+    return {"num_tokens": num_tokens, "num_experts": f.num_experts,
+            "top_k": f.top_k, "capacity_factor": f.capacity_factor}
+
+
+def build_engines(arch: str, *, reduced: bool = True, slots: int = 4,
+                  capacity: int = 128, page_size: int = 16,
+                  static_ec: Optional[EngineConfig] = None):
+    """(ContinuousEngine paged+prefix+chunked, static Engine) for ``arch``."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = make_reduced(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cont = ContinuousEngine(
+        cfg, params, slots=slots, capacity=capacity,
+        paged=True, page_size=page_size, prefix_sharing=True,
+    )
+    ec = static_ec if static_ec is not None else EngineConfig(
+        max_batch=2, max_prefill=64, max_decode=8)
+    stat = Engine(cfg, params, ec)
+    return cont, stat
+
+
+def analyze_contracts(tag: str, engine, report: Report, *,
+                      workload: Workload = _WORKLOAD) -> None:
+    """Pass 2 on one engine: trace + closure + compile-count prediction."""
+    entries = engine.shape_contract()
+    sub = Report()
+    check_contract(entries, sub)
+    if isinstance(engine, ContinuousEngine) and engine.paged:
+        check_closure(entries, capacity=engine.capacity,
+                      page_size=engine.page_size,
+                      prefill_chunk=engine.prefill_chunk,
+                      workload=workload, report=sub)
+        pred = predict_compiles(
+            slots=engine.n_slots, capacity=engine.capacity,
+            page_size=engine.page_size, prefill_chunk=engine.prefill_chunk,
+            workload=workload)
+        sub.add("predicted-compiles", "info", tag,
+                f"workload {tuple(workload.prompt_lens)} x{workload.max_new} "
+                f"new over {workload.ticks} ticks compiles: "
+                + ", ".join(f"{k}={v}" for k, v in pred.items() if v)
+                + f" (total {sum(pred.values())})")
+        sub.metrics[f"contract.{tag}.predicted_compiles"] = sum(pred.values())
+    # re-home the per-pass metric keys under this engine's tag
+    for k in list(sub.metrics):
+        if k.startswith("contract.") and not k.startswith(f"contract.{tag}"):
+            sub.metrics[f"contract.{tag}.{k[len('contract.'):]}"] = sub.metrics.pop(k)
+    report.extend(sub)
+
+
+def analyze_donations(tag: str, engine, report: Report) -> None:
+    """Pass 3a on one engine: lowered-module alias audit per jitted fn."""
+    by_name = {e.name: e for e in engine.shape_contract()}
+    for name, (fn, don, _primary) in engine.jitted_functions().items():
+        entry = by_name.get(name)
+        if entry is None or not entry.sample:
+            report.add("donation-uncovered", "error", f"{tag}.{name}",
+                       "jitted fn has no contract entry to audit donation at")
+            continue
+        args = entry.make(*entry.sample[-1])
+        audit_donation(f"{tag}.{name}", fn, args, don, report,
+                       location=f"{tag}.{name}")
+
+
+def _pkg_root() -> str:
+    import repro
+
+    # repro is a namespace package (no __init__.py): __file__ is None
+    return list(repro.__path__)[0]
+
+
+def analyze_rebinds(report: Report, donated_by_file: dict) -> None:
+    """Pass 3b: donated references are rebound at every call site."""
+    root = _pkg_root()
+    for rel, donated in donated_by_file.items():
+        path = os.path.join(root, rel)
+        with open(path) as f:
+            audit_donated_rebinds(f.read(), rel, donated, report)
+
+
+def analyze_graphs(tag: str, engine, report: Report) -> None:
+    """Pass 4 on one engine: collectives / dtype drift / dead compute in the
+    decode graph (the steady-state tick) and, for the continuous engine, the
+    budget-length prefill chunk (the admission graph)."""
+    by_name = {e.name: e for e in engine.shape_contract()}
+    cfg = engine.cfg
+    dec = by_name["decode"]
+    n_dec = engine.n_slots if isinstance(engine, ContinuousEngine) else engine.ec.max_batch
+    audit_graph(f"{tag}.decode", dec.fn, dec.make(*dec.sample[-1]),
+                moe=_moe_spec(cfg, n_dec), report=report)
+    chunk = by_name.get("prefill_chunk_first")
+    if chunk is not None:
+        pt = chunk.sample[-1]
+        audit_graph(f"{tag}.prefill_chunk", chunk.fn, chunk.make(*pt),
+                    moe=_moe_spec(cfg, pt[0]), report=report)
+
+
+def analyze_arch(arch: str, report: Report, *, reduced: bool = True,
+                 passes: Sequence[str] = ("contract", "donation", "graph")) -> None:
+    cont, stat = build_engines(arch, reduced=reduced)
+    for tag, eng in ((f"{arch}.continuous", cont), (f"{arch}.static", stat)):
+        if "contract" in passes:
+            analyze_contracts(tag, eng, report)
+        if "donation" in passes:
+            analyze_donations(tag, eng, report)
+        if "graph" in passes:
+            analyze_graphs(tag, eng, report)
+
+
+def donated_call_sites() -> dict:
+    """file -> {method attr -> donated argnum}: the engines' donating call
+    sites, derived from the jit registries' declared donations (the paged
+    continuous registry is the superset)."""
+    return {
+        "serving/continuous.py": {
+            "_decode": 4, "_prefill": 4, "_prefill_chunk_first": 4,
+            "_prefill_chunk_cont": 4, "_reset_pages": 0, "_copy_page": 0,
+            "_copy_slot": 0,
+        },
+        "serving/engine.py": {"_decode": 3, "_prefill": 2},
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", nargs="*", default=list(DEFAULT_ARCHS),
+                    help=f"registry archs to analyze (default: {DEFAULT_ARCHS})")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size configs (default: make_reduced)")
+    ap.add_argument("--strict", action="store_true",
+                    help="warnings fail the gate too")
+    ap.add_argument("--show-suppressed", action="store_true")
+    ap.add_argument("--skip", nargs="*", default=[],
+                    choices=["lint", "contract", "donation", "rebind", "graph"],
+                    help="passes to skip")
+    args = ap.parse_args(argv)
+
+    report = Report()
+    if "lint" not in args.skip:
+        report.extend(lint_tree(_pkg_root()))
+    if "rebind" not in args.skip:
+        analyze_rebinds(report, donated_call_sites())
+    engine_passes = tuple(p for p in ("contract", "donation", "graph")
+                          if p not in args.skip)
+    if engine_passes:
+        for arch in args.arch:
+            analyze_arch(arch, report, reduced=not args.full,
+                         passes=engine_passes)
+    print(report.render(show_suppressed=args.show_suppressed))
+    failed = report.failed(strict=args.strict)
+    print("analyze:", "FAIL" if failed else "OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,12 +22,20 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+# Bits per element, NOT bytes: s4/u4 buffers pack two elements per byte, so
+# byte-granular accounting overstates int4 expert/KV traffic 2x.  Bytes are
+# rounded up PER BUFFER (`_buffer_bytes`) — an odd-element int4 tensor pads
+# its final byte, matching how XLA sizes the allocation.
+_DTYPE_BITS = {
+    "f64": 64, "f32": 32, "f16": 16, "bf16": 16, "f8e4m3fn": 8, "f8e5m2": 8,
+    "s64": 64, "u64": 64, "s32": 32, "u32": 32, "s16": 16, "u16": 16,
+    "s8": 8, "u8": 8, "pred": 8, "c64": 64, "c128": 128, "s4": 4, "u4": 4,
     "token": 0, "opaque": 0,
 }
+
+
+def _buffer_bytes(dtype: str, n_elems: int) -> int:
+    return (n_elems * _DTYPE_BITS.get(dtype, 32) + 7) // 8
 
 _COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
 _SKIP_OPS = {
@@ -91,7 +99,7 @@ def _shape_bytes(shape_str: str) -> int:
         if dims.strip():
             for d in dims.split(","):
                 n *= int(d)
-        total += n * _DTYPE_BYTES.get(t, 4)
+        total += _buffer_bytes(t, n)
     return total
 
 
@@ -200,7 +208,7 @@ def parse_computations(hlo: str, score_dims: set = frozenset()) -> Dict[str, Com
                     for x in d.split(","):
                         if x.strip():
                             n *= int(x)
-                    nbytes = n * _DTYPE_BYTES.get(t, 4)
+                    nbytes = _buffer_bytes(t, n)
             cur.coll_bytes[base_op] = cur.coll_bytes.get(base_op, 0.0) + nbytes
             cur.coll_count[base_op] = cur.coll_count.get(base_op, 0) + 1
             g = _GROUPS_RE.search(line)

@@ -18,10 +18,11 @@ from typing import Dict, List
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+# bits per element (s4/u4 pack two per byte); bytes rounded up per buffer
+_DTYPE_BITS = {
+    "f64": 64, "f32": 32, "f16": 16, "bf16": 16, "f8e4m3fn": 8, "f8e5m2": 8,
+    "s64": 64, "u64": 64, "s32": 32, "u32": 32, "s16": 16, "u16": 16,
+    "s8": 8, "u8": 8, "pred": 8, "c64": 64, "c128": 128, "s4": 4, "u4": 4,
 }
 
 _COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
@@ -41,7 +42,7 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     if dims.strip():
         for d in dims.split(","):
             n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
+    return (n * _DTYPE_BITS.get(dtype, 32) + 7) // 8
 
 
 @dataclass

@@ -172,12 +172,16 @@ def _cache_write_prefill(cache: dict, k, v, positions) -> dict:
     v_tail = v[:, S - cap :]
     p_tail = positions[:, S - cap :].astype(jnp.int32)
     slots = jnp.mod(p_tail[0], cap)  # same for every batch row
-    order = jnp.argsort(slots)
-    reorder = lambda buf, vals: vals[:, order]  # rebuild, old buffer unused
+    # `slots` is a permutation of 0..cap-1, so scattering into the existing
+    # ring writes every slot — same result as rebuilding via gather, but the
+    # old buffer stays live in the graph and the caller's donate_argnums can
+    # alias it (a gather rebuild leaves the donated input unused: jax prunes
+    # it and the donation is silently dropped for every window-ring layer)
+    write = lambda buf, vals: buf.at[:, slots].set(vals)
     return {
-        "k": _write_kv(cache["k"], k_tail, reorder),
-        "v": _write_kv(cache["v"], v_tail, reorder),
-        "pos": p_tail[:, order],
+        "k": _write_kv(cache["k"], k_tail, write),
+        "v": _write_kv(cache["v"], v_tail, write),
+        "pos": cache["pos"].at[:, slots].set(p_tail),
     }
 
 

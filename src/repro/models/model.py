@@ -155,6 +155,7 @@ def _run_segments(cfg, params, x, positions, caches, mode, memory, remat,
         )
         if collect_stats:
             x, c_new, a, seg_stats = out
+            # analysis: allow(tracer-branch) — dict-emptiness check on a stats pytree (structure is static under tracing)
             if seg_stats:
                 stats[f"seg{i}"] = seg_stats
         else:

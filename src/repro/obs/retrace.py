@@ -120,6 +120,16 @@ class RetraceWatchdog:
                 )
         return fresh
 
+    def registry(self) -> Dict[str, bool]:
+        """name -> is-primary for every registered jitted function.
+
+        This is the single source of truth for "which functions carry the
+        steady-state never-retrace contract": the static contract checker
+        (``repro.analysis.contracts``) reads the same classification the
+        runtime watchdog enforces, so the two halves of the instrument can
+        never disagree about which function must be a singleton."""
+        return {name: name not in self._aux for name in self._fns}
+
     def snapshot(self) -> dict:
         return {
             "active": self.active,

@@ -75,6 +75,7 @@ def axis_size(axis_name) -> int:
         return jax.lax.axis_size(axis_name)
     import numpy as np
 
+    # analysis: allow(host-cast) — compat shim; psum-of-ones is concrete in the eager named-axis contexts old jax exposes
     return int(np.prod(jax.lax.psum(1, axis_name)))
 
 

@@ -330,10 +330,17 @@ class ContinuousEngine:
 
         if paged:
             def _step(params, tokens, positions, active, caches, tables):
-                return paged_ragged_decode_step(
+                # normalized 3-tuple return (routing = () when collection is
+                # off) so the call site rebinds the donated caches in one
+                # unpacking assignment — the donation auditor's required shape
+                out = paged_ragged_decode_step(
                     cfg, params, tokens, positions, active, caches, tables,
                     return_routing=routing,
                 )
+                if routing:
+                    return out
+                logits, caches = out
+                return logits, caches, ()
 
             self._decode = jax.jit(_step, donate_argnums=(4,))
 
@@ -376,8 +383,12 @@ class ContinuousEngine:
             )
         else:
             def _step(params, tokens, positions, active, caches):
-                return ragged_decode_step(cfg, params, tokens, positions, active, caches,
-                                          return_routing=routing)
+                out = ragged_decode_step(cfg, params, tokens, positions, active, caches,
+                                         return_routing=routing)
+                if routing:
+                    return out
+                logits, caches = out
+                return logits, caches, ()
 
             self._decode = jax.jit(_step, donate_argnums=(4,))
 
@@ -387,19 +398,100 @@ class ContinuousEngine:
 
             self._prefill = jax.jit(_prefill_one, donate_argnums=(4,))
 
-        # retrace watchdog over every jitted function the tick can invoke —
-        # a steady-state decode tick that recompiles is a serving bug
-        wd = self.obs.watchdog
-        wd.register("decode", self._decode)
-        # aux: these legitimately compile late (novel prompt/chunk lengths,
-        # first page-reset/CoW) — counted, but no steady-state warning
-        wd.register("prefill", self._prefill, aux=True)
+        # Jit registry: name -> (fn, donate_argnums, primary).  The SINGLE
+        # source of truth for which jitted functions exist, what they donate,
+        # and which carry the steady-state never-retrace contract — the
+        # retrace watchdog registers from it below (primary = non-aux) and
+        # the static analysis suite reads it back via jitted_functions() /
+        # shape_contract(), so runtime and trace-time checks cannot drift.
+        # Non-primary fns legitimately compile late (novel prompt/chunk
+        # lengths, first page-reset/CoW): counted, no steady-state warning.
+        self._jit_registry = {"decode": (self._decode, (4,), True),
+                              "prefill": (self._prefill, (4,), False)}
         if paged:
-            wd.register("prefill_chunk_first", self._prefill_chunk_first, aux=True)
-            wd.register("prefill_chunk_cont", self._prefill_chunk_cont, aux=True)
-            wd.register("reset_pages", self._reset_pages, aux=True)
-            wd.register("copy_page", self._copy_page, aux=True)
-            wd.register("copy_slot", self._copy_slot, aux=True)
+            self._jit_registry.update({
+                "prefill_chunk_first": (self._prefill_chunk_first, (4,), False),
+                "prefill_chunk_cont": (self._prefill_chunk_cont, (4,), False),
+                "reset_pages": (self._reset_pages, (0,), False),
+                "copy_page": (self._copy_page, (0,), False),
+                "copy_slot": (self._copy_slot, (0,), False),
+            })
+        wd = self.obs.watchdog
+        for _name, (_fn, _don, _primary) in self._jit_registry.items():
+            wd.register(_name, _fn, aux=not _primary)
+
+    # -- declared contracts for the static analysis suite ----------------
+    def jitted_functions(self) -> dict:
+        """name -> (jitted fn, donate_argnums, primary) for every function a
+        tick can invoke — what the donation auditor and contract checker
+        audit, and the same classification the retrace watchdog enforces."""
+        return dict(self._jit_registry)
+
+    def shape_contract(self) -> list:
+        """Declared compile-shape contract: the CLOSED set of signatures each
+        jitted function may be called with, derived from the same config
+        values that size the real buffers (slots / capacity / page geometry /
+        chunk budget).  ``analysis.contracts.check_contract`` abstract-traces
+        these; ``check_closure`` verifies scheduler-reachable states stay
+        inside them."""
+        from repro.analysis.contracts import ContractEntry
+
+        aval = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        params = jax.tree.map(aval, self.params)
+        caches = jax.tree.map(aval, self.caches)
+        i32 = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)
+        boolv = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.bool_)
+        S = self.n_slots
+
+        def entry(name, make, points, sample):
+            fn, don, primary = self._jit_registry[name]
+            return ContractEntry(name=name, fn=fn, make=make,
+                                 points=tuple(points), sample=tuple(sample),
+                                 primary=primary, donate_argnums=don)
+
+        # admission context lengths: at least `remaining` of the capacity is
+        # reserved for decode, so a prefilled context never exceeds cap - 1
+        ctx_lens = range(1, self.capacity)
+        ctx_sample = sorted({1, 2, min(16, self.capacity - 1), self.capacity - 1})
+        out = []
+        if self.paged:
+            MP = self.max_pages
+            out.append(entry(
+                "decode",
+                lambda: (params, i32(S, 1), i32(S), boolv(S), caches, i32(S, MP)),
+                [()], [()]))
+            out.append(entry(
+                "prefill",
+                lambda n: (params, i32(1, n), i32(1, n), i32(), caches, i32(MP), i32()),
+                [(n,) for n in ctx_lens], [(n,) for n in ctx_sample]))
+            # chunk lengths: non-final chunks are page-aligned budget slices,
+            # the final chunk is the context remainder — any length from 1 to
+            # the per-tick budget is admissible, nothing longer
+            chunk_lens = range(1, self.prefill_chunk + 1)
+            chunk_sample = sorted({1, max(1, self.page_size - 1), self.page_size,
+                                   min(self.page_size + 1, self.prefill_chunk),
+                                   self.prefill_chunk})
+            for nm in ("prefill_chunk_first", "prefill_chunk_cont"):
+                out.append(entry(
+                    nm,
+                    lambda n: (params, i32(1, n), i32(1, n), i32(), caches, i32(MP)),
+                    [(n,) for n in chunk_lens], [(n,) for n in chunk_sample]))
+            out.append(entry(
+                "reset_pages",
+                lambda: (caches, jax.ShapeDtypeStruct((self.n_pages + 1,), jnp.bool_)),
+                [()], [()]))
+            for nm in ("copy_page", "copy_slot"):
+                out.append(entry(nm, lambda: (caches, i32(), i32()), [()], [()]))
+        else:
+            out.append(entry(
+                "decode",
+                lambda: (params, i32(S, 1), i32(S), boolv(S), caches),
+                [()], [()]))
+            out.append(entry(
+                "prefill",
+                lambda n: (params, i32(1, n), i32(1, n), i32(), caches),
+                [(n,) for n in ctx_lens], [(n,) for n in ctx_sample]))
+        return out
 
     # -- request-lifecycle observability hooks -------------------------
     # Span taxonomy (docs/OBSERVABILITY.md): track ("request", rid) carries
@@ -565,6 +657,7 @@ class ContinuousEngine:
             self.caches, jnp.asarray(b, jnp.int32), jnp.asarray(i, jnp.int32)
         )
         self._key, sub = jax.random.split(self._key)
+        # analysis: allow(host-cast) — the fork's first token must reach the Python scheduler (slot state, _cur_token) before the next tick
         first = int(sample(jnp.asarray(base.prefill_logits), sub,
                            temperature=self.temperature,
                            top_k=self.top_k, top_p=self.top_p)[0])
@@ -674,8 +767,10 @@ class ContinuousEngine:
             self.prefill_tokens_total += len(ctx)
             self._c_prefill_toks.inc(len(ctx))
             self._key, sub = jax.random.split(self._key)
+            # analysis: allow(host-cast) — admission's first sampled token feeds Python slot state; the sync is the admission boundary, not the tick
             first = int(sample(logits, sub, temperature=self.temperature,
                                top_k=self.top_k, top_p=self.top_p)[0])
+            # analysis: allow(host-asarray) — logits already host-synced by the cast above; the stash is what forks sample from without a recompute
             stash = np.asarray(logits) if self.prefix is not None else None
             self.slots[i] = SlotState(
                 request_id=item.rid, pos=len(ctx), generated=item.generated + [first],
@@ -759,11 +854,13 @@ class ContinuousEngine:
                     self.prefix.insert(ctx, [int(p) for p in self.tables.row(i)[:n_full]])
             if end == len(ctx):
                 self._key, sub = jax.random.split(self._key)
+                # analysis: allow(host-cast) — last-chunk logits seed the request's first token; it must land in Python slot state this tick
                 first = int(sample(logits, sub, temperature=self.temperature,
                                    top_k=self.top_k, top_p=self.top_p)[0])
                 slot.prefilling = False
                 slot.prefill_ctx = []
                 slot.generated = slot.generated + [first]
+                # analysis: allow(host-asarray) — already synced by the cast above; stashed for fork admission
                 slot.prefill_logits = np.asarray(logits) if self.prefix is not None else None
                 self._cur_token[i] = first
                 self._obs_first_token(slot.request_id)
@@ -955,6 +1052,7 @@ class ContinuousEngine:
         if ran_prefill:
             # fence the async chunk writes so the prefill/decode timer split
             # attributes device time to the phase that spent it
+            # analysis: allow(block-sync) — deliberate timing fence for phase attribution
             jax.block_until_ready(self.caches)
         t_mid = time.perf_counter()
         if not decoding.any():
@@ -969,19 +1067,16 @@ class ContinuousEngine:
         tokens = jnp.asarray(self._cur_token[:, None])
         if self.paged:
             tbl = np.where(decoding[:, None], self.tables.table, -1)
-            out = self._decode(
+            logits, self.caches, routing_tree = self._decode(
                 self.params, tokens, jnp.asarray(positions), jnp.asarray(decoding),
                 self.caches, jnp.asarray(tbl),
             )
         else:
-            out = self._decode(
+            logits, self.caches, routing_tree = self._decode(
                 self.params, tokens, jnp.asarray(positions), jnp.asarray(decoding), self.caches
             )
-        if self.obs.routing:
-            logits, self.caches, routing_tree = out
-        else:
-            (logits, self.caches), routing_tree = out, None
         self._key, sub = jax.random.split(self._key)
+        # analysis: allow(host-asarray) — THE per-tick sync: sampled tokens drive eos/budget/admission decisions on the host
         nxt = np.asarray(sample(logits, sub, temperature=self.temperature,
                                 top_k=self.top_k, top_p=self.top_p))
         n_decoded = int(decoding.sum())
@@ -1005,6 +1100,7 @@ class ContinuousEngine:
         # fetching nxt blocked on the logits, but the donated cache updates
         # are still in flight — without this fence the recorded tick latency
         # under-reports the device time the tick actually consumed
+        # analysis: allow(block-sync) — deliberate timing fence for tick latency accounting
         jax.block_until_ready(self.caches)
         t1 = time.perf_counter()
         routing_m = summarize_routing(routing_tree) if routing_tree else None

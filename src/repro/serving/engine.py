@@ -109,24 +109,87 @@ class Engine:
             return prefill(cfg, params, tokens, caches, memory=memory, prefix_embeds=prefix_embeds)
 
         def _decode(params, token, index, caches, memory):
-            return decode_step(cfg, params, token, index, caches, memory=memory,
-                               return_routing=routing)
+            # normalized 3-tuple return (routing = () when collection is
+            # off): the call site can always rebind the donated caches in
+            # one unpacking assignment — the shape the donation auditor
+            # requires of every donating call
+            out = decode_step(cfg, params, token, index, caches, memory=memory,
+                              return_routing=routing)
+            if routing:
+                return out
+            logits, caches = out
+            return logits, caches, ()
 
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(_decode)
+        # caches are donated: the static engine re-allocates per batch, but
+        # without donation every decode step double-buffers the KV cache
+        self._prefill = jax.jit(_prefill, donate_argnums=(2,))
+        self._decode = jax.jit(_decode, donate_argnums=(3,))
         self._cross_len = cross_len
-        # both aux: the static engine legitimately compiles once per batch
-        # shape (B, prompt length), so the never-retrace-after-warmup
-        # contract belongs to ContinuousEngine's fixed-shape tick only;
-        # compiles are still counted into serve.retraces
-        self.obs.watchdog.register("decode", self._decode, aux=True)
-        self.obs.watchdog.register("prefill", self._prefill, aux=True)
+        # Jit registry (same shape as ContinuousEngine's): name ->
+        # (fn, donate_argnums, primary).  Both non-primary: the static engine
+        # legitimately compiles once per batch shape (B, prompt length), so
+        # the never-retrace-after-warmup contract belongs to
+        # ContinuousEngine's fixed-shape tick only; compiles are still
+        # counted into serve.retraces
+        self._jit_registry = {"decode": (self._decode, (3,), False),
+                              "prefill": (self._prefill, (2,), False)}
+        for _name, (_fn, _don, _primary) in self._jit_registry.items():
+            self.obs.watchdog.register(_name, _fn, aux=not _primary)
 
     def _make_caches(self, batch: int):
         return init_caches(
             self.cfg, batch, self._capacity,
             cross_len=self._cross_len, kv_bits=self.ec.kv_cache_bits,
         )
+
+    # -- declared contracts for the static analysis suite ----------------
+    def jitted_functions(self) -> dict:
+        """name -> (jitted fn, donate_argnums, primary); see
+        ContinuousEngine.jitted_functions."""
+        return dict(self._jit_registry)
+
+    def shape_contract(self) -> list:
+        """Declared compile-shape contract: one signature per admissible
+        (batch, prompt-length) pair, bounded by EngineConfig.  Neither
+        function is primary — the static engine's compile count scales with
+        distinct batch shapes by design (that is why ContinuousEngine
+        exists); the contract still bounds the family and feeds the
+        donation/trace checks."""
+        from repro.analysis.contracts import ContractEntry
+
+        aval = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        params = jax.tree.map(aval, self.params)
+        mem = None if self.memory is None else aval(self.memory)
+        pe = None if self.prefix_embeds is None else aval(self.prefix_embeds)
+        i32 = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)
+        ec = self.ec
+
+        def caches_avals(b):
+            return jax.eval_shape(lambda: self._make_caches(b))
+
+        batches = sorted({1, 2, ec.max_batch} & set(range(1, ec.max_batch + 1))
+                         | {ec.max_batch})
+        lens = sorted({1, 16, ec.max_prefill} & set(range(1, ec.max_prefill + 1))
+                      | {ec.max_prefill})
+        _, don_p, prim_p = self._jit_registry["prefill"]
+        _, don_d, prim_d = self._jit_registry["decode"]
+        return [
+            ContractEntry(
+                name="prefill",
+                fn=self._prefill,
+                make=lambda b, s: (params, i32(b, s), caches_avals(b), mem, pe),
+                points=tuple((b, s) for b in range(1, ec.max_batch + 1)
+                             for s in range(1, ec.max_prefill + 1)),
+                sample=tuple((b, s) for b in batches for s in lens),
+                primary=prim_p, donate_argnums=don_p),
+            ContractEntry(
+                name="decode",
+                fn=self._decode,
+                make=lambda b: (params, i32(b, 1), i32(), caches_avals(b), mem),
+                points=tuple((b,) for b in range(1, ec.max_batch + 1)),
+                sample=tuple((b,) for b in batches),
+                primary=prim_d, donate_argnums=don_d),
+        ]
 
     def generate(self, requests: Sequence[Request], *, seed: int = 0) -> List[Response]:
         ec = self.ec
@@ -161,6 +224,7 @@ class Engine:
             self.params, jnp.asarray(toks), caches, self.memory, self.prefix_embeds
         )
         if self.obs.metrics.enabled or tr:
+            # analysis: allow(block-sync) — deliberate timing fence for the prefill histogram
             jax.block_until_ready(logits)
             t1 = time.perf_counter()
             self._h_prefill.observe(t1 - t0)
@@ -178,6 +242,7 @@ class Engine:
             tr.begin(("engine", 0), "decode", args={"batch": B})
         t_prev = time.perf_counter()
         for t in range(max_new):
+            # analysis: allow(host-asarray) — THE per-step sync: tokens drive host-side eos/stop logic while the next step is dispatched
             generated[:, t] = np.asarray(cur)  # blocks on the in-flight step
             now = time.perf_counter()
             if t:  # step t-1's device time ended at this sync point
@@ -190,16 +255,17 @@ class Engine:
                 break
             key, sub = jax.random.split(key)
             idx = jnp.asarray(S + offset + t, jnp.int32)
-            out = self._decode(self.params, cur[:, None], idx, caches, self.memory)
+            # single unpacking assignment: the donated caches are rebound by
+            # the same statement that calls the donating function
+            logits, caches, routing_tree = self._decode(
+                self.params, cur[:, None], idx, caches, self.memory
+            )
             if self.obs.routing:
-                logits, caches, routing_tree = out
                 self.last_routing = summarize_routing(routing_tree) if routing_tree else None
                 if self.last_routing:
                     self._g_r_drop.set(self.last_routing["dropped_frac"])
                     self._g_r_ent.set(self.last_routing["entropy"])
                     self._g_r_imb.set(self.last_routing["imbalance"])
-            else:
-                logits, caches = out
             fresh = self.obs.watchdog.tick()
             if fresh:
                 self._c_retraces.inc(fresh)

@@ -1,0 +1,7 @@
+"""Golden fixture: trips exactly `block-sync` (explicit device fence)."""
+import jax
+
+
+def fence(x):
+    jax.block_until_ready(x)
+    return x

@@ -1,0 +1,16 @@
+"""Golden fixture: trips NO rule — pure device math, static-metadata reads,
+host predicates, and comprehensions over tree leaves are all allowed."""
+import jax
+import jax.numpy as jnp
+
+
+def normalize(x):
+    return x / (jnp.linalg.norm(x) + 1e-6)
+
+
+def widths(caches):
+    return [leaf.shape[-1] for leaf in jax.tree.leaves(caches)]
+
+
+def on_tpu():
+    return jax.default_backend() == "tpu"

@@ -1,0 +1,7 @@
+"""Golden fixture: trips exactly `debug-call` (stray jax.debug.print)."""
+import jax
+
+
+def log_tick(x):
+    jax.debug.print("tick value {}", x)
+    return x

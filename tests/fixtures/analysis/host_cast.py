@@ -1,0 +1,6 @@
+"""Golden fixture: trips exactly `host-cast` (float() over a device value)."""
+import jax.numpy as jnp
+
+
+def mean_as_float(x):
+    return float(jnp.mean(x))

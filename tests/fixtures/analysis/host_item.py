@@ -1,0 +1,7 @@
+"""Golden fixture: trips exactly `host-item` (.item() device->host sync)."""
+import jax.numpy as jnp
+
+
+def loss_scalar(x):
+    total = jnp.sum(x)
+    return total.item()

@@ -1,0 +1,9 @@
+"""Golden fixture: one violation, suppressed by an `# analysis: allow` pragma
+with a justification — reported as suppressed, never as active."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def stash(x):
+    # analysis: allow(host-asarray) — fixture: the one sanctioned sync
+    return np.asarray(jnp.tanh(x))

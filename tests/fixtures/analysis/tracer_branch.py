@@ -1,0 +1,8 @@
+"""Golden fixture: trips exactly `tracer-branch` (Python if on a tracer)."""
+import jax.numpy as jnp
+
+
+def clip_if_large(x, limit):
+    if jnp.max(x) > limit:
+        return x * 0.5
+    return x

@@ -1,0 +1,360 @@
+"""Trace-time static analysis suite (src/repro/analysis/):
+
+* golden lint fixtures — each trips exactly one rule, the clean fixture
+  trips none, the pragma fixture is suppressed-not-active;
+* donation/aliasing audit — aliases verified in the lowered module, the
+  deleted-donation mutation caught, the pruned-unused-arg index mapping
+  regression, and the host-side rebind audit;
+* compile-shape contracts — chunk arithmetic, primary-singleton, trace and
+  closure failures on synthetic entries, green on the real engine;
+* predicted-vs-observed compile parity: ``predict_compiles`` equals the
+  retrace watchdog's per-function cache sizes after a real engine run;
+* graph audits — stray collectives, int8->f32 drift, capacity dead compute;
+* the int4 fractional-byte HLO accounting regression.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    ContractEntry,
+    Report,
+    Workload,
+    audit_donated_rebinds,
+    audit_donation,
+    audit_dtype_drift,
+    audit_graph,
+    capacity_dead_compute,
+    check_closure,
+    check_contract,
+    chunk_lengths,
+    predict_compiles,
+)
+from repro.analysis.graph import audit_collectives, audit_dead_compute
+from repro.analysis.lint import LintConfig, lint_source
+from repro.configs.registry import all_configs, make_reduced
+from repro.launch.analyze import build_engines
+from repro.launch.hlo_account import _shape_bytes, account
+from repro.models.model import init_params
+from repro.obs.retrace import jit_cache_size
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Engine, EngineConfig, Request
+
+FIXDIR = os.path.join(os.path.dirname(__file__), "fixtures", "analysis")
+SDS = jax.ShapeDtypeStruct
+
+
+def _lint_fixture(fname: str, relpath: str = None) -> Report:
+    with open(os.path.join(FIXDIR, fname)) as f:
+        src = f.read()
+    # fixtures are linted AS IF they lived in a hot+traced module so every
+    # rule is active at error severity
+    return lint_source(src, relpath or f"models/{fname}")
+
+
+class TestLintFixtures:
+    @pytest.mark.parametrize("fname,rule", [
+        ("host_item.py", "host-item"),
+        ("host_cast.py", "host-cast"),
+        ("host_asarray.py", "host-asarray"),
+        ("tracer_branch.py", "tracer-branch"),
+        ("debug_call.py", "debug-call"),
+        ("block_sync.py", "block-sync"),
+    ])
+    def test_fixture_trips_exactly_one_rule(self, fname, rule):
+        rep = _lint_fixture(fname)
+        assert [f.rule for f in rep.active()] == [rule], rep.render()
+        assert rep.active()[0].severity == "error"
+
+    def test_clean_fixture_trips_nothing(self):
+        rep = _lint_fixture("clean.py")
+        assert not rep.findings, rep.render()
+
+    def test_pragma_suppresses_but_stays_visible(self):
+        rep = _lint_fixture("pragma_ok.py")
+        assert not rep.active(), rep.render()
+        assert [f.rule for f in rep.findings] == ["host-asarray"]
+        assert rep.findings[0].suppressed
+
+    def test_severity_follows_module_map(self):
+        with open(os.path.join(FIXDIR, "host_cast.py")) as f:
+            src = f.read()
+        assert _lint_fixture("host_cast.py", "serving/x.py").errors
+        cold = lint_source(src, "launch/x.py")
+        assert not cold.errors and [f.rule for f in cold.warnings] == ["host-cast"]
+        # tracer-branch only applies to traced modules; serving is hot but
+        # hosts the scheduler (Python control flow on host state is its job)
+        with open(os.path.join(FIXDIR, "tracer_branch.py")) as f:
+            tb = f.read()
+        assert not lint_source(tb, "serving/x.py").findings
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    cfg = make_reduced(all_configs()["glm4-9b"])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return ContinuousEngine(cfg, params, slots=2, capacity=64, paged=True,
+                            page_size=16, prefix_sharing=True)
+
+
+class TestDonationAudit:
+    def test_honored_donation_is_clean(self):
+        caches = {"k": SDS((8, 8), jnp.float32), "pos": SDS((8,), jnp.int32)}
+        jf = jax.jit(lambda c, x: {"k": c["k"] + x, "pos": c["pos"] + 1},
+                     donate_argnums=(0,))
+        rep = audit_donation("f", jf, (caches, SDS((), jnp.float32)), (0,))
+        assert not rep.errors, rep.render()
+        assert rep.metrics["donation.f.aliased"] == "2/2"
+
+    def test_pruned_unused_arg_does_not_shift_mapping(self):
+        """jit(keep_unused=False) drops unread flat args from the lowered
+        module; the audit must map donated leaves through kept_var_idx, not
+        raw flat positions (regression: the bool mask below is pruned and
+        used to shift every cache leaf's alias lookup by one)."""
+        caches = {"k": SDS((4, 4), jnp.float32), "pos": SDS((4,), jnp.int32)}
+        jg = jax.jit(lambda mask, c: {"k": c["k"] * 2.0, "pos": c["pos"] + 1},
+                     donate_argnums=(1,))
+        rep = audit_donation("g", jg, (SDS((4,), jnp.bool_), caches), (1,))
+        assert not rep.errors, rep.render()
+
+    def test_engine_decode_donation_honored(self, tiny_engine):
+        entry = {e.name: e for e in tiny_engine.shape_contract()}["decode"]
+        fn, don, _ = tiny_engine.jitted_functions()["decode"]
+        rep = audit_donation("decode", fn, entry.make(*entry.sample[-1]), don)
+        assert not rep.errors, rep.render()
+
+    def test_deleted_donation_mutation_caught(self, tiny_engine):
+        """Mutation: re-jit the engine's decode WITHOUT its donate_argnums
+        entry while the registry still declares it — the auditor must fail."""
+        entry = {e.name: e for e in tiny_engine.shape_contract()}["decode"]
+        fn, don, _ = tiny_engine.jitted_functions()["decode"]
+        mutated = jax.jit(lambda *a: fn(*a))  # donation entry deleted
+        rep = audit_donation("decode", mutated, entry.make(*entry.sample[-1]), don)
+        assert any(f.rule == "donation-dropped" for f in rep.errors), rep.render()
+
+    def test_rebind_audit(self):
+        good = (
+            "class E:\n"
+            "    def step(self):\n"
+            "        logits, self.caches, r = self._decode(p, t, self.caches)\n"
+        )
+        rep = audit_donated_rebinds(good, "serving/x.py", {"_decode": 2})
+        assert not rep.errors, rep.render()
+
+        bad = (
+            "class E:\n"
+            "    def step(self):\n"
+            "        out = self._decode(p, t, self.caches)\n"
+        )
+        rep = audit_donated_rebinds(bad, "serving/x.py", {"_decode": 2})
+        assert [f.rule for f in rep.errors] == ["donation-host-read"]
+
+        arity = "class E:\n    def step(self):\n        x = self._decode(p)\n"
+        rep = audit_donated_rebinds(arity, "serving/x.py", {"_decode": 2})
+        assert [f.rule for f in rep.errors] == ["donation-arity"]
+
+
+class TestContracts:
+    def test_chunk_lengths(self):
+        assert chunk_lengths(100, 0, 64, 16) == [64]
+        assert chunk_lengths(100, 96, 64, 16) == [4]  # final, unaligned OK
+        assert chunk_lengths(10, 0, 64, 16) == [10]
+        # sub-page leftover budget defers to the next tick
+        assert chunk_lengths(100, 0, 20, 16) == [16]
+        for ctx in (1, 15, 16, 17, 63, 64, 65, 100):
+            for start in range(0, ctx, 16):
+                out = chunk_lengths(ctx, start, 32, 16)
+                assert sum(out) <= 32
+                for n in out[:-1]:  # every non-final chunk page-aligned
+                    assert (start + sum(out[:out.index(n) + 1])) % 16 == 0
+
+    def test_primary_must_be_singleton(self):
+        e = ContractEntry(
+            name="decode", fn=lambda x: x + 1,
+            make=lambda n: (SDS((n,), jnp.float32),),
+            points=((4,), (8,)), sample=((4,),), primary=True)
+        rep = check_contract([e])
+        assert [f.rule for f in rep.errors] == ["contract-open"]
+
+    def test_untraceable_signature_flagged(self):
+        e = ContractEntry(
+            name="bad", fn=lambda x: x @ x,
+            make=lambda: (SDS((3, 4), jnp.float32),),
+            points=((),), sample=((),))
+        rep = check_contract([e])
+        assert [f.rule for f in rep.errors] == ["contract-trace-failed"]
+
+    def test_infeasible_donation_flagged(self):
+        e = ContractEntry(
+            name="upcast", fn=lambda c: c.astype(jnp.float32),
+            make=lambda: (SDS((8,), jnp.int8),),
+            points=((),), sample=((),), donate_argnums=(0,))
+        rep = check_contract([e])
+        assert [f.rule for f in rep.errors] == ["contract-donation-infeasible"]
+
+    def test_closure_escape(self):
+        e = ContractEntry(
+            name="prefill_chunk_first", fn=lambda x: x,
+            make=lambda n: (SDS((1, n), jnp.int32),),
+            points=((16,), (32,)), sample=((16,),))
+        rep = check_closure([e], capacity=64, page_size=16, prefill_chunk=32,
+                            workload=Workload((7,), 4, 8))
+        assert any(f.rule == "contract-escape" for f in rep.errors), rep.render()
+
+    def test_engine_contract_green(self, tiny_engine):
+        entries = tiny_engine.shape_contract()
+        rep = check_contract(entries)
+        check_closure(entries, capacity=tiny_engine.capacity,
+                      page_size=tiny_engine.page_size,
+                      prefill_chunk=tiny_engine.prefill_chunk,
+                      workload=Workload((5, 20), 4, 32), report=rep)
+        assert not rep.errors, rep.render()
+
+    def test_predict_compiles_obs_scenario(self):
+        """The benchmarks/run.py obs workload: 4x len-16 prompts, 47 ticks of
+        long decodes — exactly one decode compile, one chunk compile, zero
+        everything else (no completions inside the run)."""
+        pred = predict_compiles(
+            slots=4, capacity=256, page_size=16, prefill_chunk=64,
+            workload=Workload((16, 16, 16, 16), 236, 47))
+        assert pred == {"decode": 1, "prefill": 0, "prefill_chunk_first": 1,
+                        "prefill_chunk_cont": 0, "reset_pages": 0,
+                        "copy_slot": 0, "copy_page": 0}
+
+    def test_predicted_equals_observed_compiles(self):
+        """The acceptance contract: the static prediction must equal the
+        retrace watchdog's observed per-function compile counts on a real
+        engine run (fresh engine, mixed prompt lengths, completions)."""
+        cfg = make_reduced(all_configs()["glm4-9b"])
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = ContinuousEngine(cfg, params, slots=2, capacity=64, paged=True,
+                               page_size=16, prefix_sharing=True,
+                               prefill_chunk=32)
+        prompts = [[(i % 50) + 1 for i in range(n)] for n in (5, 20)]
+        for p in prompts:
+            eng.submit(Request(prompt=p, max_new_tokens=4))
+        eng.run_until_done()
+        observed = {name: jit_cache_size(fn) or 0
+                    for name, (fn, _, _) in eng.jitted_functions().items()}
+        pred = predict_compiles(slots=2, capacity=64, page_size=16,
+                                prefill_chunk=32,
+                                workload=Workload((5, 20), 4, 32))
+        assert observed == pred, (observed, pred)
+        assert eng.obs.watchdog.snapshot()["steady_retraces"] == 0
+
+    def test_watchdog_registry_matches_contract(self, tiny_engine):
+        """One source of truth: the watchdog's primary classification equals
+        the jit registry's, and every contract entry agrees."""
+        wd = tiny_engine.obs.watchdog.registry()
+        reg = {n: primary for n, (_, _, primary) in
+               tiny_engine.jitted_functions().items()}
+        assert wd == reg
+        for e in tiny_engine.shape_contract():
+            assert e.primary == reg[e.name], e.name
+
+
+class TestGraphAudit:
+    def test_stray_collective_detected(self):
+        f = jax.pmap(lambda x: jax.lax.psum(x, "i"), axis_name="i")
+        closed = jax.make_jaxpr(f)(jnp.ones((1, 4)))
+        rep = audit_collectives(closed, "toy")
+        assert [f_.rule for f_ in rep.errors] == ["stray-collective"]
+
+    def test_single_device_graph_clean(self):
+        closed = jax.make_jaxpr(lambda x: x @ x)(SDS((8, 8), jnp.float32))
+        rep = audit_collectives(closed, "mm")
+        audit_dtype_drift(closed, "mm", rep)
+        assert not rep.findings, rep.render()
+
+    def test_dtype_drift_threshold(self):
+        deq = lambda q: q.astype(jnp.float32) * 0.1
+        big = jax.make_jaxpr(deq)(SDS((64, 128), jnp.int8))
+        rep = audit_dtype_drift(big, "big")
+        assert [f.rule for f in rep.errors] == ["dtype-drift"]
+        small = jax.make_jaxpr(deq)(SDS((8,), jnp.int8))
+        rep = audit_dtype_drift(small, "small")
+        assert not rep.findings
+        # int32 position math is exempt by design
+        pos = jax.make_jaxpr(lambda i: i.astype(jnp.float32))(
+            SDS((64, 128), jnp.int32))
+        assert not audit_dtype_drift(pos, "pos").findings
+
+    def test_capacity_dead_compute_math(self):
+        st = capacity_dead_compute(64, 4, 2, 2.0)
+        assert st["capacity"] == 64 and st["slots"] == 256
+        assert st["padded_fraction"] == pytest.approx(0.5)
+
+    def test_expert_dot_capacity_crosscheck(self):
+        E, C, d, f = 4, 8, 16, 32
+        experts = lambda x, w: jnp.einsum("ecd,edf->ecf", x, w)
+        closed = jax.make_jaxpr(experts)(
+            SDS((E, C, d), jnp.float32), SDS((E, d, f), jnp.float32))
+        # T=16, k=1, cf=2.0 -> cap = int(2*16*1/4) = 8 == C: consistent
+        rep = audit_dead_compute(closed, "moe", num_tokens=16, num_experts=E,
+                                 top_k=1, capacity_factor=2.0)
+        assert not rep.errors
+        assert [f_.rule for f_ in rep.active("info")] == ["capacity-padding"]
+        assert rep.metrics["graph.moe.expert_dots"] == 1
+        # T=32 -> analytic cap 16 != graph's 8: the contract and graph disagree
+        rep = audit_dead_compute(closed, "moe2", num_tokens=32, num_experts=E,
+                                 top_k=1, capacity_factor=2.0)
+        assert [f_.rule for f_ in rep.errors] == ["capacity-mismatch"]
+
+    def test_engine_decode_graph_clean(self, tiny_engine):
+        entry = {e.name: e for e in tiny_engine.shape_contract()}["decode"]
+        rep = audit_graph("decode", entry.fn, entry.make(*entry.sample[-1]))
+        assert not rep.errors, rep.render()
+
+
+INT4_HLO = """\
+HloModule int4_regression
+
+ENTRY %main (p0: s4[64,128]) -> s4[64,128] {
+  %p0 = s4[64,128]{1,0} parameter(0)
+  ROOT %neg.1 = s4[64,128]{1,0} negate(%p0)
+}
+"""
+
+
+class TestInt4Accounting:
+    def test_shape_bytes_subbyte(self):
+        assert _shape_bytes("s4[64,128]") == 64 * 128 // 2  # was 2x this
+        assert _shape_bytes("u4[64,128]") == 64 * 128 // 2
+        assert _shape_bytes("s4[5]") == 3  # odd element count rounds up
+        assert _shape_bytes("u4[3,3]") == 5
+        assert _shape_bytes("s8[64,128]") == 64 * 128
+        assert _shape_bytes("f32[4]") == 16
+
+    def test_int4_hlo_traffic(self):
+        st = account(INT4_HLO)
+        # the negate materializes one s4[64,128] buffer: 4096 bytes, not 8192
+        assert st.traffic == 64 * 128 // 2, st.traffic
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", sorted(all_configs()))
+def test_contract_checker_whole_registry(arch):
+    """Every registry entry's declared compile-shape contract abstract-traces
+    clean (continuous paged + static engines; encoder-decoder archs go
+    through the static engine with synthesized encoder memory — the
+    continuous engine does not serve cross-attention)."""
+    rep = Report()
+    cfg = make_reduced(all_configs()[arch])
+    if cfg.encoder is not None:
+        from repro.models.model import encode
+
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        ms = jax.eval_shape(
+            lambda: encode(cfg, params, jnp.zeros((1, 8), jnp.int32)))
+        mem = jnp.zeros(ms.shape, ms.dtype)
+        eng = Engine(cfg, params,
+                     EngineConfig(max_batch=1, max_prefill=32, max_decode=8),
+                     memory=mem)
+        check_contract(eng.shape_contract(), rep)
+    else:
+        cont, stat = build_engines(arch)
+        for eng in (cont, stat):
+            check_contract(eng.shape_contract(), rep)
+    assert not rep.errors, rep.render()
