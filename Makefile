@@ -1,4 +1,4 @@
-.PHONY: test analyze test-quant test-paged test-prefix test-chunked test-obs test-dist bench-quant bench-kv bench-paged bench-prefix bench-chunked bench-obs
+.PHONY: test analyze test-quant test-paged test-prefix test-chunked test-obs test-grouped test-dist bench-quant bench-kv bench-paged bench-prefix bench-chunked bench-obs bench-fused-tick
 
 test:
 	sh scripts/ci.sh
@@ -21,6 +21,10 @@ test-chunked:
 test-obs:
 	PYTHONPATH=src python -m pytest -q tests/test_obs.py
 
+test-grouped:
+	PYTHONPATH=src python -m pytest -q tests/test_grouped.py \
+		tests/test_chunked.py::TestBatchedPrefillTick
+
 test-dist:
 	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		python -m pytest -q -m dist tests/test_dist.py
@@ -42,3 +46,6 @@ bench-chunked:
 
 bench-obs:
 	PYTHONPATH=src python -m benchmarks.run obs
+
+bench-fused-tick:
+	PYTHONPATH=src python -m benchmarks.run fused_tick

@@ -40,6 +40,13 @@ python -m pytest -q tests/test_obs.py
 # mid-prefill preemption, fork wait, progressive prefix registration)
 python -m pytest -q tests/test_chunked.py
 
+# fused-tick stage: grouped dropless dispatch layout invariants, grouped
+# Pallas kernel (fp/int8/int4) vs the gather-einsum oracle, token-exact
+# parity vs the dropless einsum reference under capacity-overflowing skew,
+# and batched-vs-chunked engine greedy parity across arch families
+# (batched engine cases run inside test_chunked.py above)
+python -m pytest -q tests/test_grouped.py
+
 python -m pytest -x -q --ignore=tests/test_dist.py
 
 # dist tier (jax-compat shim in parallel/compat.py + the dense-dispatch

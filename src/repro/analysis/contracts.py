@@ -218,7 +218,17 @@ def predict_compiles(*, slots: int, capacity: int, page_size: int,
     overlap between distinct prompts.  Forks model ``submit_n``: the base
     admits normally, each fork shares its pages (one ``copy_slot``
     signature) and CoWs its boundary page at the first divergent append
-    (one ``copy_page`` signature)."""
+    (one ``copy_page`` signature).
+
+    ``prefill_mode`` selects the admission state machine being replayed and
+    with it the OUTPUT KEY SET (keys mirror the engine's jit registry for
+    that mode): "chunked" predicts per-chunk-length first/cont compiles;
+    "batched" replaces them with a single ``prefill_chunk_batched`` key that
+    is 1 iff any chunk ran — the batched entry's shapes are fixed at
+    ``[slots, prefill_chunk]``, so it compiles at most once no matter the
+    workload (admission itself launches no compute; every mid-prefill slot
+    advances one chunk per tick); "scatter" predicts one ``prefill`` compile
+    per distinct context length."""
     budget_tokens = max(1, min(workload.max_new, capacity - 1))
     keep = capacity - budget_tokens
 
@@ -265,6 +275,8 @@ def predict_compiles(*, slots: int, capacity: int, page_size: int,
             if prefill_mode == "chunked":
                 spent += advance(s, prefill_chunk if budget is None
                                  else max(budget - spent, 0))
+            elif prefill_mode == "batched":
+                pass  # first chunk joins the NEXT tick's single batched call
             else:
                 scatter_sigs.add(ctx)
                 s.prefilling = False
@@ -283,13 +295,28 @@ def predict_compiles(*, slots: int, capacity: int, page_size: int,
             fork_admitted += 1
         return spent
 
+    batched_ran = False
     admit(None)  # submit() admissions: one full chunk budget each
     for _ in range(workload.ticks):
         budget = prefill_chunk
-        for s in [s for s in active if s.prefilling]:
-            if budget <= 0:
-                break
-            budget -= advance(s, budget)
+        if prefill_mode == "batched":
+            # every mid-prefill slot advances ONE chunk in the tick's single
+            # batched call (per-ROW budget, fixed [slots, chunk] shapes)
+            for s in [s for s in active if s.prefilling]:
+                ch = chunk_lengths(s.ctx, s.done, prefill_chunk, page_size)
+                if not ch:
+                    continue
+                batched_ran = True
+                s.started = True
+                s.done += ch[0]
+                if s.done >= s.ctx:
+                    s.prefilling = False
+                    s.generated = 1
+        else:
+            for s in [s for s in active if s.prefilling]:
+                if budget <= 0:
+                    break
+                budget -= advance(s, budget)
         decoders = [s for s in active if not s.prefilling]
         if decoders:
             decode_ran = True
@@ -308,10 +335,15 @@ def predict_compiles(*, slots: int, capacity: int, page_size: int,
     out = {
         "decode": 1 if decode_ran else 0,
         "prefill": len(scatter_sigs),
-        "prefill_chunk_first": len(first_lens),
-        "prefill_chunk_cont": len(cont_lens),
         "reset_pages": 1 if completions else 0,
         "copy_slot": 1 if fork_admitted else 0,
         "copy_page": 1 if cow_events else 0,
     }
+    # key set mirrors the engine's jit registry for the mode — the observed
+    # side compares EVERY registered fn's cache size, unfiltered
+    if prefill_mode == "batched":
+        out["prefill_chunk_batched"] = 1 if batched_ran else 0
+    else:
+        out["prefill_chunk_first"] = len(first_lens)
+        out["prefill_chunk_cont"] = len(cont_lens)
     return out

@@ -139,12 +139,35 @@ def capacity_dead_compute(num_tokens: int, num_experts: int, top_k: int,
 
 def audit_dead_compute(jaxpr, name: str, *, num_tokens: int, num_experts: int,
                        top_k: int, capacity_factor: float,
+                       impl: str = "einsum",
                        report: Optional[Report] = None) -> Report:
     """Cross-check the analytic padding fraction against the expert dots
     actually present in the graph (operands with leading dim
-    ``num_experts``), and report the dead-compute share as info."""
+    ``num_experts``), and report the dead-compute share as info.
+
+    ``impl="grouped"`` (dropless expert-sorted dispatch): the graph carries
+    no ``[E, C, d]`` capacity buffer at all — its expert dots run over
+    tile-padded sorted rows — so the capacity cross-check would be a FALSE
+    finding there.  The audit instead reports the dropless path's analytic
+    worst-case tile padding (< one tile per expert) as the info line."""
     report = report if report is not None else Report()
     if num_experts <= 0:
+        return report
+    if impl == "grouped":
+        from repro.core.dispatch_grouped import GROUPED_TILE, grouped_rows
+
+        tk = num_tokens * top_k
+        ct = grouped_rows(num_tokens, top_k, num_experts, GROUPED_TILE)
+        frac = 1.0 - tk / ct
+        report.add(
+            "capacity-padding", "info", name,
+            f"grouped (dropless) dispatch: no [E, C] capacity buffer in the "
+            f"graph; worst-case tile padding is {ct - tk} of {ct} sorted rows "
+            f"({frac:.1%}, tile={GROUPED_TILE}), and every routed token is "
+            "kept regardless of skew",
+        )
+        report.metrics[f"graph.{name}.expert_dots"] = 0
+        report.metrics[f"graph.{name}.padded_fraction"] = round(frac, 4)
         return report
     stats = capacity_dead_compute(num_tokens, num_experts, top_k, capacity_factor)
     expert_dots = 0

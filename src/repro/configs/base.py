@@ -234,10 +234,13 @@ class ModelConfig:
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
     # Implementation selector for MoE dispatch:
-    #   "einsum" = sparse one-hot einsum (the paper's *baseline*),
-    #   "dense"  = dense mapping-table dispatch (paper §5.4),
-    #   "ep"     = dense dispatch + explicit expert-parallel all-to-all
-    #              under shard_map (paper §5.2-5.3).
+    #   "einsum"  = sparse one-hot einsum (the paper's *baseline*),
+    #   "dense"   = dense mapping-table dispatch (paper §5.4),
+    #   "grouped" = dropless expert-sorted dispatch — no expert_capacity, no
+    #               token drops, tile-level padding only (MegaBlocks-style;
+    #               core/dispatch_grouped.py + kernels/expert_mlp_grouped.py),
+    #   "ep"      = dense dispatch + explicit expert-parallel all-to-all
+    #               under shard_map (paper §5.2-5.3).
     moe_impl: str = "dense"
 
     @property

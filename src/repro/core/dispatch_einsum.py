@@ -38,3 +38,14 @@ def moe_einsum(x: jax.Array, g: Gating, capacity: int, expert_fn):
     ye = expert_fn(xe)  # [E, C, D]
     y = jnp.einsum("ecd,tec->td", ye.astype(jnp.float32), combine)
     return y.astype(x.dtype)
+
+
+def moe_einsum_dropless(x: jax.Array, g: Gating, expert_fn):
+    """Dropless oracle for the grouped path (core/dispatch_grouped.py): the
+    same one-hot einsum dispatch, but with ``capacity = T*K`` — every
+    assignment fits by pigeonhole, so no token is ever dropped regardless of
+    routing skew.  ``g`` must have been gated with that capacity (keep
+    all-True).  O(T·E·TK·D) — a correctness reference, never a serving path.
+    """
+    T, K = g.expert_idx.shape
+    return moe_einsum(x, g, T * K, expert_fn)

@@ -1,12 +1,16 @@
 """The MoE FFN layer (DeepSpeed-MoE §3 + §4 + §5).
 
-Three interchangeable dispatch implementations (``cfg.moe_impl``):
+Four interchangeable dispatch implementations (``cfg.moe_impl``):
 
-  * ``einsum`` — sparse one-hot einsum (paper's baseline, §5.4)
-  * ``dense``  — dense mapping-table scatter/gather (paper's optimization)
-  * ``ep``     — dense dispatch + explicit expert-parallel all-to-all under
-                 shard_map with parallelism-coordinated communication
-                 (paper §5.2-5.3); requires an active mesh.
+  * ``einsum``  — sparse one-hot einsum (paper's baseline, §5.4)
+  * ``dense``   — dense mapping-table scatter/gather (paper's optimization)
+  * ``grouped`` — dropless expert-sorted dispatch (MegaBlocks-style): no
+                  ``expert_capacity``, no drops; tokens tile-pad only to the
+                  kernel tile (core/dispatch_grouped.py +
+                  kernels/expert_mlp_grouped.py)
+  * ``ep``      — dense dispatch + explicit expert-parallel all-to-all under
+                  shard_map with parallelism-coordinated communication
+                  (paper §5.2-5.3); requires an active mesh.
 
 ``residual=True`` adds the fixed dense-MLP branch of Residual-MoE (§4.1.1);
 combined with pyramid segments this gives PR-MoE.
@@ -19,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FFNSpec, ModelConfig
-from repro.core import dispatch, dispatch_einsum
+from repro.core import dispatch, dispatch_einsum, dispatch_grouped
 from repro.core.gating import (
     expert_capacity,
     load_balance_loss,
@@ -119,6 +123,56 @@ def _experts_ffn_quant(params: dict, xe: jax.Array, act: str, backend: str | Non
     return jnp.einsum("ecf,efd->ecd", h, wo.dequantize())
 
 
+# Process-wide default for the grouped (dropless) expert path, same contract
+# as QUANT_EXPERT_BACKEND: None = auto (Pallas kernel on TPU, gather-einsum
+# reference elsewhere), "kernel" / "ref" force.
+GROUPED_EXPERT_BACKEND = [None]
+
+
+def set_grouped_expert_backend(mode) -> None:
+    """Test/benchmark knob; read at trace time (not a jit cache key), so
+    changing it drops ALL cached compilations — expensive; per-call sites
+    should pass ``grouped_experts_ffn(..., backend=...)`` instead."""
+    assert mode in (None, "kernel", "ref"), mode
+    if GROUPED_EXPERT_BACKEND[0] == mode:
+        return
+    GROUPED_EXPERT_BACKEND[0] = mode
+    jax.clear_caches()
+
+
+def grouped_experts_ffn(
+    params: dict, xg: jax.Array, te: jax.Array, act: str, *, backend: str | None = None
+) -> jax.Array:
+    """xg: [Ct, D] expert-sorted tile-padded tokens; te: [Ct/tile] tile ->
+    expert map (core/dispatch_grouped.py layout) -> [Ct, D].
+
+    fp and quantized weights both route to the grouped Pallas kernel on TPU
+    (int8 AND int4 dequantize in VMEM — the grouped path is the first place
+    int4 gets a true in-kernel execution); elsewhere the gather-einsum
+    reference runs.
+    """
+    from repro.kernels import expert_mlp_grouped as gk
+
+    wi, wo = params["wi"], params["wo"]
+    wg = params.get("wg")
+    quantized = isinstance(wi, QuantizedArray)
+    mode = backend or GROUPED_EXPERT_BACKEND[0]
+    if mode is None:
+        mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if mode == "kernel" and act == "swiglu":
+        if not quantized:
+            from repro.kernels.ops import fused_expert_mlp_grouped
+
+            return fused_expert_mlp_grouped(xg, te, wi, wg, wo)
+        if gk._check_grouped_quant_compat(wi, wg, wo):
+            from repro.kernels.ops import fused_expert_mlp_grouped_quant
+
+            return fused_expert_mlp_grouped_quant(xg, te, wi, wg, wo)
+    if quantized:
+        return gk.grouped_mlp_quant_ref(xg, te, wi, wg, wo, act)
+    return gk.grouped_mlp_ref(xg, te, wi, wg, wo, act)
+
+
 # ---------------------------------------------------------------------------
 # Layer apply
 # ---------------------------------------------------------------------------
@@ -170,14 +224,23 @@ def moe_layer(
     else:
         xs = x.reshape(B * S, D)
         T = B * S
-        capacity = expert_capacity(T, E, K, spec.capacity_factor)
         logits = xs.astype(jnp.float32) @ params["router"]
-        g = top_k_gating(logits, K, capacity)
-        ef = lambda xe: experts_ffn(params, xe, spec.act)
-        if impl == "einsum":
-            y = dispatch_einsum.moe_einsum(xs, g, capacity, ef)
-        else:  # dense mapping-table
-            y = dispatch.moe_dense(xs, g, capacity, E, ef)
+        if impl == "grouped":
+            # Dropless: gate with capacity = T*K, so every assignment keeps
+            # its expert by pigeonhole (keep all-True, f/P in RoutingStats
+            # still report the balance the aux loss shapes).
+            g = top_k_gating(logits, K, T * K)
+            y = dispatch_grouped.moe_grouped(
+                xs, g, E, lambda xg, te: grouped_experts_ffn(params, xg, te, spec.act)
+            )
+        else:
+            capacity = expert_capacity(T, E, K, spec.capacity_factor)
+            g = top_k_gating(logits, K, capacity)
+            ef = lambda xe: experts_ffn(params, xe, spec.act)
+            if impl == "einsum":
+                y = dispatch_einsum.moe_einsum(xs, g, capacity, ef)
+            else:  # dense mapping-table
+                y = dispatch.moe_dense(xs, g, capacity, E, ef)
         aux = load_balance_loss(g.probs, g.expert_idx, E)
         if with_stats:
             stats = routing_stats(g, E)

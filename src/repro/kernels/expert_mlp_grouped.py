@@ -1,0 +1,280 @@
+"""Dropless grouped expert-MLP Pallas kernel (MegaBlocks-style ragged walk).
+
+The capacity kernels (``expert_mlp.py`` / ``expert_mlp_quant.py``) iterate a
+dense ``[E, C, D]`` buffer — every expert pays for ``C = expert_capacity``
+rows whether routed or not.  Here the dispatch layer
+(``core/dispatch_grouped.py``) has already *sorted* the tokens by expert into
+one flat ``[Ct, D]`` buffer of tile-padded per-expert groups, so the grid
+walks token tiles, not (expert, capacity-slot) pairs:
+
+  grid (t, f): token tile ``t`` belongs entirely to expert ``te[t]`` — the
+  scalar-prefetched tile->expert map indexes the weight BlockSpecs directly,
+  so each tile streams exactly its own expert's ``[D, BF]`` / ``[BF, D]``
+  weight slices from HBM.  SwiGLU + down-projection accumulate across the
+  innermost ``f`` axis in VMEM, same as the capacity kernel.
+
+Ragged group boundaries therefore cost *zero* control flow in the kernel:
+the raggedness lives in ``te`` (data) and in the zero rows padding each
+group to the tile — at most ``tile - 1`` wasted rows per expert, versus
+``C - count_e`` per expert for the capacity path.
+
+Quantized variants dequantize int8 tiles in VMEM (per-output-channel f32
+scales ride in ``[1, BF]`` / ``[1, D]`` blocks), and int4 additionally
+unpacks two nibbles per stored byte along the contraction axis in-register —
+the grouped path is where int4 weights first get a true dequant-in-kernel
+execution (the capacity kernel int4 path is einsum-ref only).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.expert_mlp import BLOCK_F
+from repro.quant.qarrays import QuantizedArray
+
+# ---------------------------------------------------------------------------
+# fp kernel
+# ---------------------------------------------------------------------------
+
+
+def _grouped_mlp_kernel(te_ref, x_ref, wi_ref, wg_ref, wo_ref, o_ref):
+    del te_ref  # consumed by the index maps
+    f = pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [BT, D] — one token tile, all rows share expert te[t]
+    h = jnp.dot(x, wi_ref[0], preferred_element_type=jnp.float32)  # [BT, BF]
+    g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+    act = (jax.nn.silu(g) * h).astype(x.dtype)
+    o_ref[...] += jnp.dot(act, wo_ref[0], preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_f"))
+def grouped_mlp_kernel(
+    xg: jax.Array,  # [Ct, D] — tile-padded, expert-sorted token buffer
+    te: jax.Array,  # [Ct / BT] int32 — tile -> expert id (scalar-prefetched)
+    wi: jax.Array,  # [E, D, F]
+    wg: jax.Array,  # [E, D, F]
+    wo: jax.Array,  # [E, F, D]
+    *,
+    interpret: bool = True,
+    block_f: int = BLOCK_F,
+) -> jax.Array:
+    Ct, D = xg.shape
+    nt = te.shape[0]
+    F = wi.shape[-1]
+    bt = Ct // nt  # token tile == the dispatch layout's tile
+    bf = min(block_f, F)
+    assert Ct % nt == 0 and F % bf == 0, (Ct, nt, F, bf)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt, F // bf),
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda t, f, te: (t, 0)),
+            pl.BlockSpec((1, D, bf), lambda t, f, te: (te[t], 0, f)),
+            pl.BlockSpec((1, D, bf), lambda t, f, te: (te[t], 0, f)),
+            pl.BlockSpec((1, bf, D), lambda t, f, te: (te[t], f, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, D), lambda t, f, te: (t, 0)),
+    )
+    out = pl.pallas_call(
+        _grouped_mlp_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Ct, D), jnp.float32),
+        interpret=interpret,
+    )(te, xg, wi, wg, wo)
+    return out.astype(xg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# quantized kernel (int8 / int4, dequant in VMEM)
+# ---------------------------------------------------------------------------
+
+
+def _widen(tile: jax.Array, bits: int) -> jax.Array:
+    """int8 tile -> f32; int4 tile additionally unpacks 2 nibbles/byte along
+    axis 0 (the contraction axis — qarrays packs along ``reduce_axes[0]``),
+    matching ``qarrays._unpack_int4`` bit-for-bit."""
+    if bits == 8:
+        return tile.astype(jnp.float32)
+    qm = tile.astype(jnp.int32) & 0xFF
+    lo = qm & 0xF
+    hi = (qm >> 4) & 0xF
+    lo = lo - 16 * (lo > 7)
+    hi = hi - 16 * (hi > 7)
+    n, m = tile.shape
+    return jnp.stack([lo, hi], axis=1).reshape(n * 2, m).astype(jnp.float32)
+
+
+def _grouped_mlp_quant_kernel(
+    te_ref, x_ref, wi_ref, wis_ref, wg_ref, wgs_ref, wo_ref, wos_ref, o_ref, *, bits
+):
+    del te_ref
+    f = pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [BT, D]
+    wi = _widen(wi_ref[0], bits) * wis_ref[0]  # [D, BF] * [1, BF]
+    wg = _widen(wg_ref[0], bits) * wgs_ref[0]
+    h = jnp.dot(x, wi.astype(x.dtype), preferred_element_type=jnp.float32)
+    g = jnp.dot(x, wg.astype(x.dtype), preferred_element_type=jnp.float32)
+    act = (jax.nn.silu(g) * h).astype(x.dtype)
+    wo = _widen(wo_ref[0], bits) * wos_ref[0]  # [BF, D] * [1, D]
+    o_ref[...] += jnp.dot(act, wo.astype(x.dtype), preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret", "block_f"))
+def grouped_mlp_quant_kernel(
+    xg: jax.Array,  # [Ct, D]
+    te: jax.Array,  # [Ct / BT] int32
+    wi_q: jax.Array,  # [E, D(/2), F] int8 (contraction axis packed when int4)
+    wi_s: jax.Array,  # [E, 1, F] f32
+    wg_q: jax.Array,
+    wg_s: jax.Array,
+    wo_q: jax.Array,  # [E, F(/2), D] int8
+    wo_s: jax.Array,  # [E, 1, D] f32
+    *,
+    bits: int,
+    interpret: bool = True,
+    block_f: int = BLOCK_F,
+) -> jax.Array:
+    Ct, D = xg.shape
+    nt = te.shape[0]
+    F = wi_q.shape[-1]
+    bt = Ct // nt
+    bf = min(block_f, F)
+    assert Ct % nt == 0 and F % bf == 0, (Ct, nt, F, bf)
+    pack = 2 if bits == 4 else 1
+    assert D % pack == 0 and bf % pack == 0, (D, bf, pack)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt, F // bf),
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda t, f, te: (t, 0)),
+            pl.BlockSpec((1, D // pack, bf), lambda t, f, te: (te[t], 0, f)),
+            pl.BlockSpec((1, 1, bf), lambda t, f, te: (te[t], 0, f)),
+            pl.BlockSpec((1, D // pack, bf), lambda t, f, te: (te[t], 0, f)),
+            pl.BlockSpec((1, 1, bf), lambda t, f, te: (te[t], 0, f)),
+            # wo is packed along F: block index f over packed rows of size
+            # bf/pack covers exactly the unpacked slice [f*bf, (f+1)*bf)
+            pl.BlockSpec((1, bf // pack, D), lambda t, f, te: (te[t], f, 0)),
+            pl.BlockSpec((1, 1, D), lambda t, f, te: (te[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, D), lambda t, f, te: (t, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_grouped_mlp_quant_kernel, bits=bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Ct, D), jnp.float32),
+        interpret=interpret,
+    )(te, xg, wi_q, wi_s, wg_q, wg_s, wo_q, wo_s)
+    return out.astype(xg.dtype)
+
+
+def _check_grouped_quant_compat(wi, wg, wo, *, block_f: int = BLOCK_F) -> bool:
+    """Kernel path: SwiGLU QuantizedArray triples with per-output-channel
+    scales (group_size == 0) at 8 or 4 bits.  Unlike the capacity kernel,
+    int4 IS supported (nibble unpack in VMEM); group-wise scales still take
+    the dequant-ref path.  Token-tile divisibility is guaranteed by the
+    dispatch layout (Ct is a tile multiple by construction); only the f
+    axis needs checking, plus even tiles for nibble packing."""
+    qs = (wi, wg, wo)
+    if wg is None or not all(isinstance(q, QuantizedArray) for q in qs):
+        return False
+    if not all(q.bits in (8, 4) and q.group_size == 0 for q in qs):
+        return False
+    bits = wi.bits
+    if any(q.bits != bits for q in qs):
+        return False
+    F = wi.shape[-1]
+    D = wo.shape[-1]
+    bf = min(block_f, F)
+    if F % bf:
+        return False
+    pack = 2 if bits == 4 else 1
+    return D % pack == 0 and bf % pack == 0
+
+
+def grouped_mlp_quant(
+    xg: jax.Array,
+    te: jax.Array,
+    wi: QuantizedArray,
+    wg: QuantizedArray,
+    wo: QuantizedArray,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Kernel entry from QuantizedArray leaves (int8/int4 per-channel)."""
+    if not _check_grouped_quant_compat(wi, wg, wo):
+        raise ValueError(
+            "grouped_mlp_quant kernel needs int8/int4 per-output-channel "
+            "QuantizedArrays (group_size=0) and a block-divisible d_ff; got "
+            f"bits={getattr(wi, 'bits', None)}, "
+            f"group_size={getattr(wi, 'group_size', None)}, F={wi.shape[-1]}"
+        )
+    return grouped_mlp_quant_kernel(
+        xg, te, wi.q, wi.scale, wg.q, wg.scale, wo.q, wo.scale,
+        bits=wi.bits, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# references (pure-jnp oracles + CPU execution path)
+# ---------------------------------------------------------------------------
+
+
+def grouped_mlp_ref(
+    xg: jax.Array,  # [Ct, D]
+    te: jax.Array,  # [Ct / tile] int32
+    wi: jax.Array,
+    wg: jax.Array | None,
+    wo: jax.Array,
+    act: str = "swiglu",
+) -> jax.Array:
+    """Gather-einsum oracle: gather each tile's expert weights, batched GEMM
+    over tiles.  Supports all acts (the Pallas kernel is SwiGLU-only, like
+    the capacity kernels)."""
+    Ct, D = xg.shape
+    nt = te.shape[0]
+    xt = xg.reshape(nt, Ct // nt, D)
+    h = jnp.einsum("tcd,tdf->tcf", xt, wi[te], preferred_element_type=jnp.float32)
+    if act == "swiglu":
+        g = jnp.einsum("tcd,tdf->tcf", xt, wg[te], preferred_element_type=jnp.float32)
+        h = jax.nn.silu(g) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    y = jnp.einsum("tcf,tfd->tcd", h.astype(xg.dtype), wo[te],
+                   preferred_element_type=jnp.float32)
+    return y.reshape(Ct, D).astype(xg.dtype)
+
+
+def grouped_mlp_quant_ref(
+    xg: jax.Array,
+    te: jax.Array,
+    wi: QuantizedArray,
+    wg: QuantizedArray | None,
+    wo: QuantizedArray,
+    act: str = "swiglu",
+) -> jax.Array:
+    """Dequantize whole weights into the fp oracle (correctness reference for
+    the quant kernel, and the default CPU execution path in core/moe.py)."""
+    return grouped_mlp_ref(
+        xg, te, wi.dequantize(), wg.dequantize() if wg is not None else None,
+        wo.dequantize(), act,
+    )

@@ -36,6 +36,23 @@ def fused_expert_mlp_quant(xe, wi, wg, wo):
     return expert_mlp_quant(xe, wi, wg, wo, interpret=_interpret())
 
 
+def fused_expert_mlp_grouped(xg, te, wi, wg, wo):
+    """Dropless grouped expert MLP: ``xg`` [Ct, D] expert-sorted tile-padded
+    tokens, ``te`` the scalar-prefetched tile->expert map
+    (kernels/expert_mlp_grouped.py)."""
+    from repro.kernels.expert_mlp_grouped import grouped_mlp_kernel
+
+    return grouped_mlp_kernel(xg, te, wi, wg, wo, interpret=_interpret())
+
+
+def fused_expert_mlp_grouped_quant(xg, te, wi, wg, wo):
+    """Dropless grouped expert MLP over int8/int4 QuantizedArrays — tiles
+    dequantized (int4: nibble-unpacked) in VMEM before each MXU dot."""
+    from repro.kernels.expert_mlp_grouped import grouped_mlp_quant
+
+    return grouped_mlp_quant(xg, te, wi, wg, wo, interpret=_interpret())
+
+
 def fused_decode_attention_quant(q, kq, ks, vq, vs, kpos, qpos, *, scale, causal, window, softcap):
     """Decode attention over an int8 KV cache — K/V tiles dequantized in
     VMEM right before the attention dots (kernels/attention_quant.py).

@@ -17,6 +17,11 @@ anything executes on a device — and turns the findings into an exit code:
      single-device serving graphs, no int8/int4 -> f32 dequant upcasts, and
      the capacity-padding dead-compute fraction for MoE archs (info).
 
+Besides the ``--arch`` targets it also analyzes a fused-tick engine
+(``nlg-350m-moe128`` with ``moe_impl="grouped"`` + ``prefill_mode="batched"``)
+so the grouped dropless dispatch graph and the batched-prefill contract /
+compile-count prediction are gated too (``--no-fused`` skips it).
+
 Exit 0 = no unsuppressed errors (``--strict``: no warnings either).
 
   PYTHONPATH=src python -m repro.launch.analyze                 # glm4 + gemma3
@@ -67,20 +72,31 @@ def _moe_spec(cfg, num_tokens: int) -> Optional[dict]:
     if f is None:
         return None
     return {"num_tokens": num_tokens, "num_experts": f.num_experts,
-            "top_k": f.top_k, "capacity_factor": f.capacity_factor}
+            "top_k": f.top_k, "capacity_factor": f.capacity_factor,
+            "impl": cfg.moe_impl}
 
 
 def build_engines(arch: str, *, reduced: bool = True, slots: int = 4,
                   capacity: int = 128, page_size: int = 16,
-                  static_ec: Optional[EngineConfig] = None):
-    """(ContinuousEngine paged+prefix+chunked, static Engine) for ``arch``."""
+                  static_ec: Optional[EngineConfig] = None,
+                  moe_impl: Optional[str] = None,
+                  prefill_mode: str = "chunked"):
+    """(ContinuousEngine paged+prefix, static Engine) for ``arch``.
+    ``moe_impl`` overrides the config's dispatch implementation (the grouped
+    dropless target); ``prefill_mode`` selects the admission state machine
+    ("chunked" default, "batched" = the fused-tick single-dispatch entry)."""
+    import dataclasses
+
     cfg = get_config(arch)
     if reduced:
         cfg = make_reduced(cfg)
+    if moe_impl is not None:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
     params = init_params(cfg, jax.random.PRNGKey(0))
     cont = ContinuousEngine(
         cfg, params, slots=slots, capacity=capacity,
         paged=True, page_size=page_size, prefix_sharing=True,
+        prefill_mode=prefill_mode,
     )
     ec = static_ec if static_ec is not None else EngineConfig(
         max_batch=2, max_prefill=64, max_decode=8)
@@ -102,7 +118,7 @@ def analyze_contracts(tag: str, engine, report: Report, *,
         pred = predict_compiles(
             slots=engine.n_slots, capacity=engine.capacity,
             page_size=engine.page_size, prefill_chunk=engine.prefill_chunk,
-            workload=workload)
+            workload=workload, prefill_mode=engine.prefill_mode)
         sub.add("predicted-compiles", "info", tag,
                 f"workload {tuple(workload.prompt_lens)} x{workload.max_new} "
                 f"new over {workload.ticks} ticks compiles: "
@@ -161,12 +177,25 @@ def analyze_graphs(tag: str, engine, report: Report) -> None:
         pt = chunk.sample[-1]
         audit_graph(f"{tag}.prefill_chunk", chunk.fn, chunk.make(*pt),
                     moe=_moe_spec(cfg, pt[0]), report=report)
+        return
+    # batched fused-tick engines build one fixed-shape prefill entry instead
+    # of the first/cont chunk family; its sample point is the singleton ()
+    batched = by_name.get("prefill_chunk_batched")
+    if batched is not None:
+        nt = engine.n_slots * engine.prefill_chunk
+        audit_graph(f"{tag}.prefill_chunk_batched", batched.fn,
+                    batched.make(*batched.sample[-1]),
+                    moe=_moe_spec(cfg, nt), report=report)
 
 
 def analyze_arch(arch: str, report: Report, *, reduced: bool = True,
-                 passes: Sequence[str] = ("contract", "donation", "graph")) -> None:
-    cont, stat = build_engines(arch, reduced=reduced)
-    for tag, eng in ((f"{arch}.continuous", cont), (f"{arch}.static", stat)):
+                 passes: Sequence[str] = ("contract", "donation", "graph"),
+                 moe_impl: Optional[str] = None,
+                 prefill_mode: str = "chunked", tag: str = "") -> None:
+    cont, stat = build_engines(arch, reduced=reduced, moe_impl=moe_impl,
+                               prefill_mode=prefill_mode)
+    base = f"{arch}{tag}"
+    for tag, eng in ((f"{base}.continuous", cont), (f"{base}.static", stat)):
         if "contract" in passes:
             analyze_contracts(tag, eng, report)
         if "donation" in passes:
@@ -182,8 +211,8 @@ def donated_call_sites() -> dict:
     return {
         "serving/continuous.py": {
             "_decode": 4, "_prefill": 4, "_prefill_chunk_first": 4,
-            "_prefill_chunk_cont": 4, "_reset_pages": 0, "_copy_page": 0,
-            "_copy_slot": 0,
+            "_prefill_chunk_cont": 4, "_prefill_chunk_batched": 6,
+            "_reset_pages": 0, "_copy_page": 0, "_copy_slot": 0,
         },
         "serving/engine.py": {"_decode": 3, "_prefill": 2},
     }
@@ -201,6 +230,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--skip", nargs="*", default=[],
                     choices=["lint", "contract", "donation", "rebind", "graph"],
                     help="passes to skip")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="skip the grouped-MoE + batched-prefill fused-tick "
+                         "engine target")
     args = ap.parse_args(argv)
 
     report = Report()
@@ -214,6 +246,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         for arch in args.arch:
             analyze_arch(arch, report, reduced=not args.full,
                          passes=engine_passes)
+        if not args.no_fused:
+            # the fused-tick configuration the PR 8 work is measured against:
+            # grouped (dropless) expert dispatch + single batched prefill call
+            analyze_arch("nlg-350m-moe128", report, reduced=not args.full,
+                         passes=engine_passes, moe_impl="grouped",
+                         prefill_mode="batched", tag="+fused")
     print(report.render(show_suppressed=args.show_suppressed))
     failed = report.failed(strict=args.strict)
     print("analyze:", "FAIL" if failed else "OK")

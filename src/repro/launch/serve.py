@@ -15,6 +15,13 @@ whose context repeats an indexed full-page prefix point their block tables
 at the existing physical pages, and ``--n-samples N`` serves N parallel
 samples per prompt off one set of prompt pages (diverging via CoW).
 
+``--prefill-mode batched`` fuses every mid-prefill slot's next chunk into ONE
+fixed-shape jitted call per tick (the fused tick: at most one prefill + one
+decode dispatch), and ``--moe-impl grouped`` serves the dropless
+expert-sorted MoE dispatch — no expert_capacity, no token drops.  The
+``serve.jitted_calls_per_tick`` and ``serve.batched_prefill_occupancy``
+gauges in the rendered snapshot show both at work.
+
 Observability (docs/OBSERVABILITY.md): the run's SLO histograms (queue-wait,
 TTFT, TPOT, tick latency), lifecycle counters, and MoE routing gauges are
 printed from one metrics ``snapshot()`` — ``--metrics-out`` appends the SAME
@@ -48,7 +55,11 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--moe-impl", default=None, choices=[None, "einsum", "dense", "ep"])
+    ap.add_argument("--moe-impl", default=None,
+                    choices=[None, "einsum", "dense", "ep", "grouped"],
+                    help="MoE dispatch implementation override; 'grouped' is "
+                         "the dropless expert-sorted Pallas path (no "
+                         "expert_capacity, no token drops)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=0.0)
@@ -81,6 +92,13 @@ def main() -> None:
                          "page-aligned chunk per tick interleaved with "
                          "decode, bounding time-to-first-token head-of-line "
                          "blocking; must be >= --page-size")
+    ap.add_argument("--prefill-mode", default="chunked",
+                    choices=["chunked", "batched", "scatter"],
+                    help="with --paged: 'chunked' prefills one slot per tick "
+                         "(default), 'batched' fuses ALL mid-prefill slots "
+                         "into one fixed-shape jitted call per tick (fused "
+                         "tick: at most one prefill + one decode dispatch), "
+                         "'scatter' is the legacy non-chunked admission")
     ap.add_argument("--prefix-sharing", action="store_true",
                     help="with --paged: refcounted copy-on-write page sharing "
                          "— contexts repeating an indexed full-page prefix "
@@ -109,6 +127,9 @@ def main() -> None:
     if args.prefill_chunk and args.prefill_chunk < args.page_size:
         ap.error(f"--prefill-chunk {args.prefill_chunk} must be >= --page-size "
                  f"{args.page_size} (chunk boundaries are page-aligned)")
+    if args.prefill_mode != "chunked" and not args.paged:
+        ap.error(f"--prefill-mode {args.prefill_mode} is an admission policy "
+                 "of the paged continuous engine; pass --paged")
     if args.n_samples > 1 and not args.paged:
         ap.error("--n-samples > 1 is served by the paged continuous engine; "
                  "pass --paged")
@@ -124,6 +145,12 @@ def main() -> None:
     if args.top_k > cfg.vocab_size:
         ap.error(f"--top-k {args.top_k} exceeds vocab_size {cfg.vocab_size}")
     if args.moe_impl:
+        has_moe = any(getattr(ls.ffn, "num_experts", 0)
+                      for seg in cfg.segments for ls in seg.pattern)
+        if args.moe_impl == "grouped" and not has_moe:
+            ap.error(f"--moe-impl grouped: arch '{cfg.name}' has no MoE "
+                     "layers to dispatch — pick an MoE arch (e.g. "
+                     "nlg-350m-moe128) or drop the flag")
         cfg = cfg.replace(moe_impl=args.moe_impl)
 
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -164,6 +191,12 @@ def main() -> None:
             print("NB: under an active mesh the EP shard_map path serves "
                   "materialized fp experts (no memory win; see "
                   "repro.quant.prepare_params_for_serving)")
+        if cfg.moe_impl == "grouped" and args.quant_group_size:
+            print(f"NB: the grouped Pallas kernel dequantizes per-output-"
+                  f"channel scales in VMEM; group_size="
+                  f"{args.quant_group_size} scales take the dequant-ref "
+                  "path (experts re-widened per call — drop "
+                  "--quant-group-size to keep the kernel)")
     elif args.ckpt:
         params, _ = ckpt.load(args.ckpt, params)
 
@@ -222,6 +255,7 @@ def main() -> None:
             cfg, params, slots=slots, capacity=capacity,
             temperature=ec.temperature, top_k=ec.top_k, top_p=ec.top_p,
             kv_cache_bits=ec.kv_cache_bits, paged_cfg=pcfg, obs=obs,
+            prefill_mode=args.prefill_mode,
         )
         contig_b = kv_cache_bytes(jax.eval_shape(
             lambda: init_caches(cfg, slots, capacity, kv_bits=args.kv_bits)))

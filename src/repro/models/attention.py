@@ -306,6 +306,96 @@ def _paged_cache_write_chunk(cache: dict, k_new, v_new, positions, table_row) ->
     return {"k": k, "v": v, "pos": pos_arr}
 
 
+def _paged_cache_write_chunk_batched(cache: dict, k_new, v_new, positions, tables) -> dict:
+    """Multi-slot variant of ``_paged_cache_write_chunk``: every mid-prefill
+    slot's chunk lands in ONE scatter.  positions: [B, C] with -1 marking
+    invalid entries (rows past their chunk end, fully inactive rows); tables:
+    [B, max_pages].  Invalid entries and shared-prefix re-writes (the
+    ``already`` detection, same rule as the single-slot path) route to the
+    trash page with a -1 position.  Distinct valid entries never collide: a
+    page written this tick cannot yet be prefix-indexed, so no two slots
+    target it (the scheduler only maps shared — i.e. fully-written — pages
+    into more than one table row)."""
+    Pt, ps = cache["pos"].shape
+    B, C = positions.shape
+    pos = positions.astype(jnp.int32)
+    valid = pos >= 0
+    entry = jnp.where(valid, pos // ps, 0)
+    offs = jnp.where(valid, pos % ps, 0)
+    pages = _paged_clamp_table(jnp.take_along_axis(tables, entry, axis=1), Pt)
+    already = cache["pos"][pages, offs] == pos  # shared-prefix entries
+    pages = jnp.where(already | ~valid, Pt - 1, pages)
+    flat_p = pages.reshape(-1)
+    flat_o = offs.reshape(-1)
+    write = lambda buf, vals: buf.at[flat_p, flat_o].set(
+        vals.reshape((B * C,) + vals.shape[2:])
+    )
+    k = _write_kv(cache["k"], k_new, write)
+    v = _write_kv(cache["v"], v_new, write)
+    # every trash-page write carries -1, so colliding invalid entries are
+    # order-independent: the trash page's pos stays pinned at -1
+    pos_val = jnp.where(pages == Pt - 1, -1, pos)
+    pos_arr = cache["pos"].at[flat_p, flat_o].set(pos_val.reshape(-1))
+    return {"k": k, "v": v, "pos": pos_arr}
+
+
+def _paged_prefill_chunk_attend_batched(q, k, v, cache: dict, positions, tables, spec: AttnSpec, scale: float):
+    """Multi-slot variant of ``_paged_prefill_chunk_attend``: each row's chunk
+    queries attend over that row's pages ++ its own in-flight K/V.  q/k/v:
+    [B, C, ...]; positions [B, C] (-1 invalid); tables [B, max_pages].  Rows
+    mask their pool history at positions >= their OWN chunk start
+    (``positions[:, 0]``); invalid queries see an all-masked score row —
+    finite uniform softmax garbage that the caller's active-mask merge and
+    last-valid-token logit gather never read."""
+    mode = PAGED_BACKEND[0]
+    if mode is None:
+        mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+    window = spec.window if spec.kind == "local" else 0
+    Pt = cache["pos"].shape[0]
+    tbl = _paged_clamp_table(tables, Pt)  # [B, nt]
+    quant = isinstance(cache["k"], QuantizedKV)
+    B, C, H, dh = q.shape
+    Hkv = k.shape[2]
+    if mode == "kernel":
+        from repro.kernels.ops import fused_prefill_attention_paged
+
+        # statically unrolled per-row kernel launches — all inside the ONE
+        # jitted batched-prefill call (a single host dispatch per tick)
+        if quant:
+            args = (cache["k"].q, cache["k"].scale, cache["v"].q, cache["v"].scale)
+        else:
+            args = (cache["k"], None, cache["v"], None)
+        ys = []
+        for b in range(B):
+            qg = q[b].reshape(C, Hkv, H // Hkv, dh)
+            ys.append(fused_prefill_attention_paged(
+                qg, *args, cache["pos"], tbl[b], positions[b], k[b], v[b],
+                scale=scale, causal=spec.causal, window=window,
+                softcap=spec.logit_softcap,
+            ))
+        return jnp.stack(ys).reshape(B, C, H, dh)
+    if quant:
+        kh = materialize_kv(QuantizedKV(
+            _paged_gather(cache["k"].q, tbl), _paged_gather(cache["k"].scale, tbl),
+            cache["k"].orig_dtype,
+        ))
+        vh = materialize_kv(QuantizedKV(
+            _paged_gather(cache["v"].q, tbl), _paged_gather(cache["v"].scale, tbl),
+            cache["v"].orig_dtype,
+        ))
+    else:
+        kh = _paged_gather(cache["k"], tbl)
+        vh = _paged_gather(cache["v"], tbl)
+    kcat = jnp.concatenate([kh.astype(k.dtype), k], axis=1)
+    vcat = jnp.concatenate([vh.astype(v.dtype), v], axis=1)
+    hist_pos = _paged_gather(cache["pos"], tbl)  # [B, nt*ps]
+    start = positions[:, :1]  # per-row chunk start (-1 rows mask everything)
+    hist_pos = jnp.where(hist_pos >= start, -1, hist_pos)  # pool = strictly pre-chunk
+    k_pos = jnp.concatenate([hist_pos, positions], axis=1)
+    mask = _window_causal_mask(positions, k_pos, window, spec.causal)
+    return _sdpa(q, kcat, vcat, mask, scale, spec.logit_softcap)
+
+
 def _paged_prefill_chunk_attend(q, k, v, cache: dict, positions, table_row, spec: AttnSpec, scale: float):
     """Chunk queries attend over (already-written pool pages: earlier chunks
     + shared prefix, read in place) ++ (the chunk's own in-flight fp K/V,
@@ -377,6 +467,27 @@ def _cache_write_chunk(cache: dict, k, v, positions) -> dict:
     k_ = _write_kv(cache["k"], k, write)
     v_ = _write_kv(cache["v"], v, write)
     pos_ = cache["pos"].at[:, slots].set(positions.astype(jnp.int32))
+    return {"k": k_, "v": v_, "pos": pos_}
+
+
+def _cache_write_chunk_batched(cache: dict, k, v, positions) -> dict:
+    """Multi-slot variant of ``_cache_write_chunk`` for per-slot window rings:
+    positions [B, C] per row, -1 invalid.  Each row keeps only its last
+    ``cap`` valid tokens (everything older just fell out of the ring) laid
+    out at slot == pos % cap; invalid/older entries get slot index ``cap``,
+    which is out of bounds and therefore DROPPED by the scatter (JAX's
+    default OOB-scatter semantics) — the ring row is untouched by them."""
+    cap = cache["k"].shape[1]
+    B, C = positions.shape
+    pos = positions.astype(jnp.int32)
+    row_max = jnp.max(pos, axis=1, keepdims=True)
+    keep = (pos >= 0) & (pos > row_max - cap)
+    slots = jnp.where(keep, jnp.mod(pos, cap), cap)  # cap == OOB -> dropped
+    rows = jnp.arange(B)[:, None]
+    write = lambda buf, vals: buf.at[rows, slots].set(vals)
+    k_ = _write_kv(cache["k"], k, write)
+    v_ = _write_kv(cache["v"], v, write)
+    pos_ = cache["pos"].at[rows, slots].set(pos)
     return {"k": k_, "v": v_, "pos": pos_}
 
 
@@ -568,7 +679,7 @@ def attention(
         y = _sdpa(q, k, v, mask, scale, spec.logit_softcap)
         new_cache = (
             {"k": k, "v": v, "pos": jnp.broadcast_to(k_pos, (B, k.shape[1])).astype(jnp.int32)}
-            if mode in ("prefill", "prefill_chunk")  # chunk re-writes: idempotent
+            if mode in ("prefill", "prefill_chunk", "prefill_chunk_batched")  # chunk re-writes: idempotent
             else cache
         )
         out = jnp.einsum("bshe,hed->bsd", y, materialize(params["wo"]))
@@ -594,19 +705,28 @@ def attention(
     if cp > 1 and mode != "decode" and S % cp == 0:
         q = shard_hint(q, "batch", "q_seq", None, None)
 
-    if mode == "prefill_chunk":
+    if mode in ("prefill_chunk", "prefill_chunk_batched"):
         assert cache is not None
+        batched = mode == "prefill_chunk_batched"
         pos2d = positions if positions.ndim == 2 else positions[None]
         pos2d = jnp.broadcast_to(pos2d, (B, S)).astype(jnp.int32)
         if spec_is_paged(spec) and block_table is not None:
             # paged layer: attend over the pre-write pool + in-flight chunk,
             # then write the chunk's K/V straight into its pages
-            table_row = block_table[0] if block_table.ndim == 2 else block_table
-            y = _paged_prefill_chunk_attend(q, k, v, cache, pos2d, table_row, spec, scale)
-            new_cache = _paged_cache_write_chunk(cache, k, v, pos2d[0], table_row)
+            if batched:
+                # block_table is [B, max_pages] — one row per mid-prefill slot
+                y = _paged_prefill_chunk_attend_batched(q, k, v, cache, pos2d, block_table, spec, scale)
+                new_cache = _paged_cache_write_chunk_batched(cache, k, v, pos2d, block_table)
+            else:
+                table_row = block_table[0] if block_table.ndim == 2 else block_table
+                y = _paged_prefill_chunk_attend(q, k, v, cache, pos2d, table_row, spec, scale)
+                new_cache = _paged_cache_write_chunk(cache, k, v, pos2d[0], table_row)
         else:
             # window ring (or contiguous cache) resume: earlier chunks are in
-            # the cache, the current chunk is in flight
+            # the cache, the current chunk is in flight.  This attend is
+            # already per-row (cache/pos/mask all carry the batch axis), so
+            # the batched mode shares it — only the write-back differs
+            # (-1-aware per-row scatter vs the single-row slot map).
             kcat = jnp.concatenate([materialize_kv(cache["k"]).astype(k.dtype), k], axis=1)
             vcat = jnp.concatenate([materialize_kv(cache["v"]).astype(v.dtype), v], axis=1)
             k_pos = jnp.concatenate([cache["pos"], pos2d], axis=1)
@@ -614,7 +734,10 @@ def attention(
                 pos2d, k_pos, spec.window if spec.kind == "local" else 0, spec.causal
             )
             y = _sdpa(q, kcat, vcat, mask, scale, spec.logit_softcap)
-            new_cache = _cache_write_chunk(cache, k, v, pos2d)
+            if batched:
+                new_cache = _cache_write_chunk_batched(cache, k, v, pos2d)
+            else:
+                new_cache = _cache_write_chunk(cache, k, v, pos2d)
         y = shard_hint(y, "batch", "seq", "heads", "head_dim")
         out = jnp.einsum("bshe,hed->bsd", y, materialize(params["wo"]))
         return out, new_cache

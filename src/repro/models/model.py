@@ -551,6 +551,102 @@ def paged_prefill_chunk(
     return logits, merged
 
 
+def paged_prefill_chunk_batched(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # [S, C] int32 — one chunk per slot, 0-padded
+    positions: jax.Array,  # [S, C] int32 — absolute positions, -1 at padding
+    reset: jax.Array,  # [S] bool — row runs its admission's FIRST chunk
+    active: jax.Array,  # [S] bool — row has a chunk this tick
+    last_idx: jax.Array,  # [S] int32 — index of each row's last valid token
+    caches: dict,  # from init_paged_caches
+    block_tables: jax.Array,  # [S, max_pages] int32 — -1 unmapped; all -1 when inactive
+    *,
+    capacity: int,
+    kv_bits: int = 0,
+    page_size: int,
+    memory: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """ALL mid-prefill slots advance one chunk in a single jitted call — the
+    batched replacement for looping ``paged_prefill_chunk`` per slot.  With N
+    admissions mid-prefill, the per-slot loop issues N dispatches per engine
+    tick; this issues ONE, making a tick at most {one batched prefill, one
+    batched decode} (the "fused tick").  Numerics per row are identical to
+    the per-slot path (tests/test_chunked.py asserts token-exact parity):
+
+      * rows' chunks may have different lengths — each row is a valid prefix
+        (positions >= 0) followed by -1 padding.  Padding is inert by
+        construction, not by masking outputs: paged attention writes route
+        invalid positions to the trash page, ring writes drop them via the
+        scatter's out-of-bounds semantics, SSM steps use dt = 0 (identity),
+        LRU gates freeze (a = 1, b = 0), and conv prefixes are extracted at
+        each row's last valid input;
+      * INACTIVE rows (no chunk this tick) carry all--1 table rows, so their
+        pool writes also land in the trash page, and their per-slot leaves
+        (rings, SSM/LRU states, cross caches) are restored from the incoming
+        caches by the ``active`` masked merge below;
+      * ``reset`` rows start their per-slot leaves from freshly-initialized
+        values (zero recurrence state, ring pos -1) exactly as
+        ``paged_prefill_chunk(reset=True)`` does — a reused slot must not
+        leak its previous occupant's state.
+
+    Distinct rows never write the same pool entry: the scheduler maps each
+    page to exactly one owner, and a page written this tick cannot appear in
+    another row's table as a shared prefix (sharing only covers pages
+    completed on a PRIOR tick).  Trash-page collisions are order-independent
+    (every trash write stores pos = -1).
+
+    Returns (logits at each row's last valid position [S, V], updated
+    caches); only rows finishing their prompt this tick use their logits (to
+    seed the first sampled token) — the rest are discarded by the engine.
+    """
+    x = embed_tokens(cfg, params, tokens)
+    S = tokens.shape[0]
+
+    fresh = init_paged_caches(
+        cfg, S, capacity, n_pages=1, page_size=page_size, kv_bits=kv_bits
+    )  # pool leaves unused (DCE'd); per-slot leaves give reset rows' values
+
+    def _reset_rows(cur, fr):
+        mask = reset.reshape((1, -1) + (1,) * (cur.ndim - 2))
+        return jnp.where(mask, fr.astype(cur.dtype), cur)
+
+    one = {}
+    for sk, pk, ls, paged in _layer_entries(cfg):
+        c = caches[sk][pk]
+        o = {}
+        for key in c:
+            if key == "self" and paged:
+                o[key] = c[key]  # shared pool — addressed via the tables
+            else:
+                o[key] = jax.tree.map(_reset_rows, c[key], fresh[sk][pk][key])
+        one.setdefault(sk, {})[pk] = o
+
+    x, updated, _ = _run_segments(
+        cfg, params, x, positions, one, "prefill_chunk_batched", memory, False,
+        block_table=block_tables,
+    )
+    xe = jnp.take_along_axis(x, last_idx.astype(jnp.int32)[:, None, None], axis=1)
+    logits = logits_out(cfg, params, xe)[:, 0]  # [S, V]
+
+    def _merge(new, old):
+        # per-slot leaves: [repeats, S, ...] — select on the batch axis
+        mask = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+        return jnp.where(mask, new, old)
+
+    merged = {}
+    for sk, pk, ls, paged in _layer_entries(cfg):
+        c_new, c_old = updated[sk][pk], caches[sk][pk]
+        o = {}
+        for key in c_new:
+            if key == "self" and paged:
+                o[key] = c_new[key]  # pool — inactive rows trash-routed
+            else:
+                o[key] = jax.tree.map(_merge, c_new[key], c_old[key])
+        merged.setdefault(sk, {})[pk] = o
+    return logits, merged
+
+
 def paged_prefill_into_slot(
     cfg: ModelConfig,
     params: dict,

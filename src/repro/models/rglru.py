@@ -85,6 +85,7 @@ def lru_layer(
     *,
     cache: Optional[dict] = None,
     mode: str = "train",
+    positions: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     B, S, D = x.shape
     gate = jax.nn.gelu(x @ params["in_gate"])  # [B,S,W]
@@ -92,13 +93,25 @@ def lru_layer(
 
     # decode AND chunked-prefill resume carry state across calls (conv prefix
     # + recurrence state entering the chunk)
-    resume = cache is not None and (mode.startswith("decode") or mode == "prefill_chunk")
+    resume = cache is not None and (
+        mode.startswith("decode") or mode in ("prefill_chunk", "prefill_chunk_batched")
+    )
+    # batched multi-slot chunk prefill: positions [B, S] carry -1 at padded /
+    # inactive entries.  a=1, b=0 there freezes the recurrence (h_t = h_{t-1})
+    # so hs[:, -1] IS the state at each row's last valid position; the conv
+    # prefix is extracted at the last valid input (see _causal_conv).
+    batched = mode == "prefill_chunk_batched" and positions is not None
+    valid = (positions >= 0) if batched else None  # [B, S]
+    valid_len = jnp.sum(valid, axis=1) if batched else None
     prefix = cache["conv"] if resume else None
     from repro.models.ssm import _causal_conv
 
-    xb, new_prefix = _causal_conv(xb, params["conv_w"], prefix)
+    xb, new_prefix = _causal_conv(xb, params["conv_w"], prefix, valid_len)
 
     a, b = _gates(params, xb, spec.num_heads)  # [B,S,W] f32 each
+    if batched:
+        a = jnp.where(valid[..., None], a, 1.0)
+        b = jnp.where(valid[..., None], b, 0.0)
 
     if mode.startswith("decode") and S == 1:
         h0 = cache["state"]

@@ -52,14 +52,28 @@ def init_ssm_cache(batch: int, spec: SSMSpec, dtype) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _causal_conv(x: jax.Array, w: jax.Array, prefix: Optional[jax.Array] = None):
-    """Depthwise causal conv. x: [B, L, C]; w: [K, C]; prefix: [B, K-1, C]."""
+def _causal_conv(x: jax.Array, w: jax.Array, prefix: Optional[jax.Array] = None,
+                 valid_len: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: [B, L, C]; w: [K, C]; prefix: [B, K-1, C].
+
+    ``valid_len`` [B] (batched chunk prefill): each row's inputs are a valid
+    prefix of length n_i followed by padding; the returned conv prefix must
+    then be the K-1 inputs ENDING AT the last valid position — xp[n_i :
+    n_i + K-1] per row — not the tail of the padded buffer.  n_i == L
+    reproduces the default tail; n_i == 0 returns the incoming prefix
+    unchanged (identity for inactive rows).  Outputs at valid positions are
+    never contaminated by padding: the conv is causal and valid positions
+    precede all padding in the row."""
     K = w.shape[0]
     if prefix is None:
         prefix = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
     xp = jnp.concatenate([prefix, x], axis=1)  # [B, L+K-1, C]
     out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
-    new_prefix = xp[:, xp.shape[1] - (K - 1) :]
+    if valid_len is None:
+        new_prefix = xp[:, xp.shape[1] - (K - 1) :]
+    else:
+        idx = valid_len.astype(jnp.int32)[:, None] + jnp.arange(K - 1, dtype=jnp.int32)
+        new_prefix = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     return out, new_prefix
 
 
@@ -186,6 +200,7 @@ def ssm_layer(
     *,
     cache: Optional[dict] = None,
     mode: str = "train",
+    positions: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     B, S, D = x.shape
     di, g, n, h, p = spec.d_inner, spec.n_groups, spec.state_dim, spec.num_heads, spec.head_dim
@@ -197,9 +212,19 @@ def ssm_layer(
     # decode AND chunked-prefill resume carry state across calls: the conv
     # prefix and SSD state picked up mid-sequence make chunk-by-chunk
     # processing exact (ssd_chunked takes an init_state for precisely this)
-    resume = cache is not None and (mode.startswith("decode") or mode == "prefill_chunk")
+    resume = cache is not None and (
+        mode.startswith("decode") or mode in ("prefill_chunk", "prefill_chunk_batched")
+    )
+    # batched multi-slot chunk prefill: positions [B, S] carry -1 for padded /
+    # inactive entries.  dt = 0 there makes the SSD step the identity (decay
+    # exp(0) = 1, input x*dt = 0 — the same exactness argument as
+    # ssd_chunked's chunk padding), and the conv prefix is extracted at each
+    # row's last VALID input.
+    batched = mode == "prefill_chunk_batched" and positions is not None
+    valid = (positions >= 0) if batched else None  # [B, S]
+    valid_len = jnp.sum(valid, axis=1) if batched else None
     prefix = cache["conv"] if resume else None
-    conv_out, new_prefix = _causal_conv(conv_in, params["conv_w"], prefix)
+    conv_out, new_prefix = _causal_conv(conv_in, params["conv_w"], prefix, valid_len)
     conv_out = jax.nn.silu(conv_out)
     xin, Bm, Cm = jnp.split(conv_out, [di, di + g * n], axis=-1)
 
@@ -207,6 +232,8 @@ def ssm_layer(
     Bh = Bm.reshape(B, S, g, n).astype(jnp.float32)
     Ch = Cm.reshape(B, S, g, n).astype(jnp.float32)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,h]
+    if batched:
+        dt = jnp.where(valid[:, :, None], dt, 0.0)  # identity step on padding
     A = -jnp.exp(params["A_log"])  # [h], negative
 
     init_state = cache["state"] if resume else None

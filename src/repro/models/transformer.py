@@ -116,9 +116,13 @@ def apply_layer(
             block_table=block_table,
         )
     elif isinstance(m, SSMSpec):
-        y, new_self = ssm_layer(cfg, m, params["ssm"], h, cache=sc, mode=mode)
+        y, new_self = ssm_layer(
+            cfg, m, params["ssm"], h, cache=sc, mode=mode, positions=positions
+        )
     elif isinstance(m, LRUSpec):
-        y, new_self = lru_layer(cfg, m, params["lru"], h, cache=sc, mode=mode)
+        y, new_self = lru_layer(
+            cfg, m, params["lru"], h, cache=sc, mode=mode, positions=positions
+        )
     else:
         raise TypeError(m)
     x = x + y

@@ -58,6 +58,20 @@ fixed, so the jitted decode step never recompiles as traffic arrives/leaves
 prefill compiles once per distinct chunk length (the page-aligned budget
 plus each prompt's final remainder), same order as the per-prompt-length
 compiles of the scatter path.
+
+``prefill_mode="batched"`` fuses the tick further: ALL mid-prefill slots
+advance one chunk in a SINGLE jitted call
+(``models.model.paged_prefill_chunk_batched``) on a fixed ``[slots,
+prefill_chunk]`` stacked shape — per-slot active masks, -1-padded position
+rows, trash-routed tables for inactive rows — so an engine tick issues at
+most two primary dispatches ({one batched prefill, one batched decode})
+regardless of how many admissions are mid-prefill, and the batched entry
+compiles exactly once (no per-chunk-length compiles at all).  Per-row
+numerics are identical to the per-slot chunked path (tests/test_chunked.py
+asserts token-exact greedy parity); "chunked" stays the default because the
+batched call pads every row to the full chunk budget — it wins when several
+admissions overlap (dispatch count), "chunked" when prefill traffic is
+sparse (no padded compute).
 """
 from __future__ import annotations
 
@@ -79,6 +93,7 @@ from repro.models.model import (
     paged_copy_page,
     paged_copy_slot_leaves,
     paged_prefill_chunk,
+    paged_prefill_chunk_batched,
     paged_prefill_into_slot,
     paged_ragged_decode_step,
     paged_reset_pages,
@@ -205,8 +220,15 @@ class ContinuousEngine:
             prefill_chunk = paged_cfg.prefill_chunk
         if prefix_sharing and not paged:
             raise ValueError("prefix_sharing requires paged=True (block tables)")
-        if prefill_mode not in ("chunked", "scatter"):
-            raise ValueError(f"prefill_mode must be 'chunked' or 'scatter', got {prefill_mode!r}")
+        if prefill_mode not in ("chunked", "batched", "scatter"):
+            raise ValueError(
+                f"prefill_mode must be 'chunked', 'batched' or 'scatter', got {prefill_mode!r}"
+            )
+        if prefill_mode == "batched" and not paged:
+            raise ValueError(
+                "prefill_mode='batched' requires paged=True: the batched chunk "
+                "prefill writes directly into pool pages through block tables"
+            )
         self.cfg = cfg
         from repro.quant import prepare_params_for_serving
 
@@ -280,6 +302,15 @@ class ContinuousEngine:
         # tick never runs more than prefill_chunk tokens of prefill no
         # matter how many admissions it cascades into.
         self._tick_budget: Optional[int] = None
+        # prefill tokens computed during the current tick (both chunked and
+        # batched modes add to it; _end_tick_prefill drains it)
+        self._tick_prefill_done = 0
+        # jitted-function invocations since the last recorded tick (every
+        # _jit_registry fn call site increments it) and, in batched mode, the
+        # fraction of slot rows carrying a real chunk in this tick's batched
+        # prefill call — the two "fused tick" gauges
+        self._jit_calls_tick = 0
+        self._batched_occ_tick = 0.0
         self._metrics_cap = 65_536  # keep a bounded telemetry window
         self.last_metrics: dict = {}
         self._tick = 0
@@ -320,6 +351,8 @@ class ContinuousEngine:
         self._g_occupancy = M.gauge("serve.page_occupancy")
         self._g_peak_occ = M.gauge("serve.peak_page_occupancy")
         self._g_shared = M.gauge("serve.shared_pages")
+        self._g_jit_calls = M.gauge("serve.jitted_calls_per_tick", unit="call")
+        self._g_batch_occ = M.gauge("serve.batched_prefill_occupancy")
         self._g_r_drop = M.gauge("routing.dropped_frac")
         self._g_r_ent = M.gauge("routing.entropy", unit="nat")
         self._g_r_imb = M.gauge("routing.imbalance")
@@ -353,21 +386,38 @@ class ContinuousEngine:
 
             self._prefill = jax.jit(_prefill_one, donate_argnums=(4,))
 
-            def _prefill_chunk_fn(params, tokens, positions, slot, caches, table_row, *, reset):
-                return paged_prefill_chunk(
-                    cfg, params, tokens, positions, slot, caches, table_row,
-                    capacity=capacity, kv_bits=kv_cache_bits, page_size=page_size,
-                    reset=reset,
-                )
+            if prefill_mode == "batched":
+                # ONE fixed-shape entry covers every mid-prefill slot's chunk
+                # per tick; reset/active are traced row masks, so the batched
+                # call compiles exactly once — the per-slot first/cont jits
+                # are deliberately NOT built in this mode (the jit registry,
+                # watchdog, and predict_compiles key sets stay coherent)
+                def _prefill_chunk_batched_fn(params, tokens, positions, reset,
+                                              active, last_idx, caches, tables):
+                    return paged_prefill_chunk_batched(
+                        cfg, params, tokens, positions, reset, active, last_idx,
+                        caches, tables, capacity=capacity,
+                        kv_bits=kv_cache_bits, page_size=page_size,
+                    )
 
-            # one compilation per distinct chunk length (budget + remainders)
-            # x {first, continuation} — the first chunk of an admission resets
-            # the slot's per-slot leaves (previous occupant's state), later
-            # chunks resume them
-            self._prefill_chunk_first = jax.jit(
-                functools.partial(_prefill_chunk_fn, reset=True), donate_argnums=(4,))
-            self._prefill_chunk_cont = jax.jit(
-                functools.partial(_prefill_chunk_fn, reset=False), donate_argnums=(4,))
+                self._prefill_chunk_batched = jax.jit(
+                    _prefill_chunk_batched_fn, donate_argnums=(6,))
+            else:
+                def _prefill_chunk_fn(params, tokens, positions, slot, caches, table_row, *, reset):
+                    return paged_prefill_chunk(
+                        cfg, params, tokens, positions, slot, caches, table_row,
+                        capacity=capacity, kv_bits=kv_cache_bits, page_size=page_size,
+                        reset=reset,
+                    )
+
+                # one compilation per distinct chunk length (budget + remainders)
+                # x {first, continuation} — the first chunk of an admission resets
+                # the slot's per-slot leaves (previous occupant's state), later
+                # chunks resume them
+                self._prefill_chunk_first = jax.jit(
+                    functools.partial(_prefill_chunk_fn, reset=True), donate_argnums=(4,))
+                self._prefill_chunk_cont = jax.jit(
+                    functools.partial(_prefill_chunk_fn, reset=False), donate_argnums=(4,))
             self._reset_pages = jax.jit(
                 lambda caches, mask: paged_reset_pages(cfg, caches, mask),
                 donate_argnums=(0,),
@@ -409,9 +459,18 @@ class ContinuousEngine:
         self._jit_registry = {"decode": (self._decode, (4,), True),
                               "prefill": (self._prefill, (4,), False)}
         if paged:
+            if prefill_mode == "batched":
+                # fixed-shape, compiles once — it carries the steady-state
+                # never-retrace contract alongside decode (primary): the
+                # "fused tick" is at most these two dispatches
+                self._jit_registry["prefill_chunk_batched"] = (
+                    self._prefill_chunk_batched, (6,), True)
+            else:
+                self._jit_registry.update({
+                    "prefill_chunk_first": (self._prefill_chunk_first, (4,), False),
+                    "prefill_chunk_cont": (self._prefill_chunk_cont, (4,), False),
+                })
             self._jit_registry.update({
-                "prefill_chunk_first": (self._prefill_chunk_first, (4,), False),
-                "prefill_chunk_cont": (self._prefill_chunk_cont, (4,), False),
                 "reset_pages": (self._reset_pages, (0,), False),
                 "copy_page": (self._copy_page, (0,), False),
                 "copy_slot": (self._copy_slot, (0,), False),
@@ -464,18 +523,31 @@ class ContinuousEngine:
                 "prefill",
                 lambda n: (params, i32(1, n), i32(1, n), i32(), caches, i32(MP), i32()),
                 [(n,) for n in ctx_lens], [(n,) for n in ctx_sample]))
-            # chunk lengths: non-final chunks are page-aligned budget slices,
-            # the final chunk is the context remainder — any length from 1 to
-            # the per-tick budget is admissible, nothing longer
-            chunk_lens = range(1, self.prefill_chunk + 1)
-            chunk_sample = sorted({1, max(1, self.page_size - 1), self.page_size,
-                                   min(self.page_size + 1, self.prefill_chunk),
-                                   self.prefill_chunk})
-            for nm in ("prefill_chunk_first", "prefill_chunk_cont"):
+            if self.prefill_mode == "batched":
+                # ONE fixed signature: [slots, prefill_chunk] stacked chunks
+                # (ragged rows ride as -1-padded positions), so the batched
+                # entry has a singleton contract — the static-shape property
+                # that makes it a primary never-retrace function
+                C = self.prefill_chunk
                 out.append(entry(
-                    nm,
-                    lambda n: (params, i32(1, n), i32(1, n), i32(), caches, i32(MP)),
-                    [(n,) for n in chunk_lens], [(n,) for n in chunk_sample]))
+                    "prefill_chunk_batched",
+                    lambda: (params, i32(S, C), i32(S, C), boolv(S), boolv(S),
+                             i32(S), caches, i32(S, MP)),
+                    [()], [()]))
+            else:
+                # chunk lengths: non-final chunks are page-aligned budget
+                # slices, the final chunk is the context remainder — any
+                # length from 1 to the per-tick budget is admissible, nothing
+                # longer
+                chunk_lens = range(1, self.prefill_chunk + 1)
+                chunk_sample = sorted({1, max(1, self.page_size - 1), self.page_size,
+                                       min(self.page_size + 1, self.prefill_chunk),
+                                       self.prefill_chunk})
+                for nm in ("prefill_chunk_first", "prefill_chunk_cont"):
+                    out.append(entry(
+                        nm,
+                        lambda n: (params, i32(1, n), i32(1, n), i32(), caches, i32(MP)),
+                        [(n,) for n in chunk_lens], [(n,) for n in chunk_sample]))
             out.append(entry(
                 "reset_pages",
                 lambda: (caches, jax.ShapeDtypeStruct((self.n_pages + 1,), jnp.bool_)),
@@ -653,6 +725,7 @@ class ContinuousEngine:
         pages = [int(p) for p in self.tables.row(b) if p >= 0]
         self.pool.share(pages, owner=i)
         self.tables.copy_row(i, b)
+        self._jit_calls_tick += 1
         self.caches = self._copy_slot(
             self.caches, jnp.asarray(b, jnp.int32), jnp.asarray(i, jnp.int32)
         )
@@ -730,7 +803,7 @@ class ContinuousEngine:
                 self.tables.append(i, shared + fresh)
             self.queue.pop(0)
             self._obs_admitted(item.rid, i)
-            if self.paged and self.prefill_mode == "chunked":
+            if self.paged and self.prefill_mode in ("chunked", "batched"):
                 # resumable admission: pages are reserved, compute is spread
                 # over ticks.  On fully-paged archs shared-prefix positions
                 # are never computed at all — their K/V is read from the
@@ -746,10 +819,14 @@ class ContinuousEngine:
                     prefilling=True, prefill_ctx=ctx, prefill_done=start,
                 )
                 self._admit_counter += 1
-                self._advance_prefill(i)
+                if self.prefill_mode == "chunked":
+                    self._advance_prefill(i)
+                # batched mode: the slot joins the NEXT tick's single batched
+                # prefill call — admission itself launches no compute
                 continue
             toks = jnp.asarray(np.asarray(ctx, np.int32)[None])
             pos = jnp.arange(len(ctx), dtype=jnp.int32)[None]
+            self._jit_calls_tick += 1
             if self.paged:
                 # scatter oracle: full-context prefill into a temp contiguous
                 # cache; shared-prefix positions are recomputed but their
@@ -829,6 +906,7 @@ class ContinuousEngine:
             if self._tr:
                 self._tr.begin(("slot", i), f"chunk[{start}:{end})",
                                args={"rid": slot.request_id})
+            self._jit_calls_tick += 1
             logits, self.caches = fn(
                 self.params, toks, pos, jnp.asarray(i, jnp.int32), self.caches,
                 jnp.asarray(self.tables.row(i)),
@@ -842,6 +920,7 @@ class ContinuousEngine:
             self._c_prefill_toks.inc(n)
             if local_budget is None:
                 self._tick_budget -= n
+                self._tick_prefill_done += n
             else:
                 local_budget -= n
             slot.prefill_done = slot.pos = end
@@ -885,12 +964,105 @@ class ContinuousEngine:
                 break
             self._advance_prefill(i)
 
+    def _prefill_tick_batched(self) -> None:
+        """One tick's admission prefill as a SINGLE jitted call: every
+        mid-prefill slot advances one chunk (up to ``prefill_chunk`` tokens
+        each, page-aligned boundaries — the same per-slot chunk arithmetic as
+        ``_advance_prefill``) through the fixed-shape batched entry.  Rows
+        without a chunk this tick ride along inactive: all--1 table rows
+        (pool writes trash-routed) and a masked per-slot-leaf merge inside
+        the model entry keep their state untouched.  Finalization — first
+        sampled token, progressive prefix-index registration, completion /
+        cascaded admission — replays ``_advance_prefill``'s final-chunk
+        semantics per finishing row, in admission order."""
+        order = sorted(
+            (i for i, s in enumerate(self.slots) if s.active and s.prefilling),
+            key=lambda i: self.slots[i].admit_seq,
+        )
+        plan: Dict[int, tuple] = {}
+        for i in order:
+            slot = self.slots[i]
+            ctx, start = slot.prefill_ctx, slot.prefill_done
+            end = min(len(ctx), start + self.prefill_chunk)
+            if end < len(ctx):
+                end -= end % self.page_size
+                if end <= start:
+                    continue  # < one page of room — resume next tick
+            plan[i] = (start, end)
+        if not plan:
+            return
+        S, C = self.n_slots, self.prefill_chunk
+        tokens = np.zeros((S, C), np.int32)
+        positions = np.full((S, C), -1, np.int32)
+        reset = np.zeros((S,), bool)
+        active = np.zeros((S,), bool)
+        last_idx = np.zeros((S,), np.int32)
+        tbl = np.full((S, self.max_pages), -1, np.int32)
+        for i, (start, end) in plan.items():
+            slot = self.slots[i]
+            n = end - start
+            tokens[i, :n] = np.asarray(slot.prefill_ctx[start:end], np.int32)
+            positions[i, :n] = np.arange(start, end, dtype=np.int32)
+            reset[i] = not slot.prefill_started
+            active[i] = True
+            last_idx[i] = n - 1
+            tbl[i] = self.tables.row(i)
+            if self._tr:
+                self._tr.begin(("slot", i), f"chunk[{start}:{end})",
+                               args={"rid": slot.request_id})
+        self._jit_calls_tick += 1
+        self._batched_occ_tick = len(plan) / S
+        logits, self.caches = self._prefill_chunk_batched(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(reset), jnp.asarray(active), jnp.asarray(last_idx),
+            self.caches, jnp.asarray(tbl),
+        )
+        if self._tr:
+            for i in plan:
+                self._tr.end(("slot", i))
+        logits_host: Optional[np.ndarray] = None
+        for i, (start, end) in plan.items():  # dict preserves admission order
+            slot = self.slots[i]
+            n = end - start
+            self._tick_prefill_done += n
+            self.prefill_tokens_total += n
+            self._c_prefill_toks.inc(n)
+            slot.prefill_started = True
+            slot.prefill_done = slot.pos = end
+            ctx = slot.prefill_ctx
+            if self.prefix is not None:
+                # progressive registration, same as the per-slot path: pages
+                # this chunk completed are shareable NOW
+                n_full = end // self.page_size
+                if n_full:
+                    self.prefix.insert(ctx, [int(p) for p in self.tables.row(i)[:n_full]])
+            if end == len(ctx):
+                if logits_host is None:
+                    # analysis: allow(host-asarray) — ONE sync serves every row finishing its prompt this tick; their first tokens must land in Python slot state
+                    logits_host = np.asarray(logits)
+                row = logits_host[i : i + 1]
+                self._key, sub = jax.random.split(self._key)
+                # analysis: allow(host-cast) — the finishing row's first sampled token feeds Python slot state (eos/budget/fork decisions)
+                first = int(sample(jnp.asarray(row), sub, temperature=self.temperature,
+                                   top_k=self.top_k, top_p=self.top_p)[0])
+                slot.prefilling = False
+                slot.prefill_ctx = []
+                slot.generated = slot.generated + [first]
+                slot.prefill_logits = row.copy() if self.prefix is not None else None
+                self._cur_token[i] = first
+                self._obs_first_token(slot.request_id)
+                self._finish_if_done(i)
+        if self.queue:
+            # a fork blocked on a just-finished base's prefill can now share it
+            self._admit()
+
     def _end_tick_prefill(self) -> int:
         """Close the tick's prefill budget; returns tokens spent this tick."""
         if self._tick_budget is None:
             return 0
-        done = self.prefill_chunk - self._tick_budget
+        done = self._tick_prefill_done
         self._tick_budget = None
+        self._tick_prefill_done = 0
         return done
 
     def _release_slot(self, i: int) -> None:
@@ -909,6 +1081,7 @@ class ContinuousEngine:
                 # later owner would see the previous occupant's stale K/V
                 mask = np.zeros((self.n_pages + 1,), bool)
                 mask[freed] = True
+                self._jit_calls_tick += 1
                 self.caches = self._reset_pages(self.caches, jnp.asarray(mask))
         self.slots[i] = SlotState()
 
@@ -1002,6 +1175,7 @@ class ContinuousEngine:
                     if victim == i:
                         break  # re-queued; a sharer keeps the page alive
                     continue  # a preemption may even have dropped the refcount
+                self._jit_calls_tick += 1
                 self.caches = self._copy_page(
                     self.caches, jnp.asarray(page, jnp.int32), jnp.asarray(new, jnp.int32)
                 )
@@ -1025,11 +1199,13 @@ class ContinuousEngine:
         if self._tr:
             self._tr.begin(("engine", 0), "tick", ts=t0,
                            args={"tick": self._tick + 1})
-        if self.paged and self.prefill_mode == "chunked":
+        if self.paged and self.prefill_mode in ("chunked", "batched"):
             # bounded head-of-line blocking: decode (below) runs every tick,
             # delayed by at most this one chunk of prefill compute — the
             # budget spans the whole tick, so admissions cascaded from
-            # completions draw from it too
+            # completions draw from it too.  (Batched mode budgets per ROW:
+            # every mid-prefill slot advances one chunk in the single batched
+            # call, so the tick still issues at most one prefill dispatch.)
             self._tick_budget = self.prefill_chunk
         if not any(s.active for s in self.slots):
             self._admit()
@@ -1039,7 +1215,10 @@ class ContinuousEngine:
                     self._tr.end(("engine", 0))
                 return 0
         if self._tick_budget is not None:
-            self._prefill_tick()
+            if self.prefill_mode == "batched":
+                self._prefill_tick_batched()
+            else:
+                self._prefill_tick()
         if self.paged:
             self._ensure_pages()
         # rows eligible to decode this tick — mid-prefill slots are excluded,
@@ -1047,8 +1226,7 @@ class ContinuousEngine:
         # writes land in the trash page, never in a half-written prompt page
         decoding = np.asarray([s.active and not s.prefilling for s in self.slots])
         n_active = int(sum(s.active for s in self.slots))
-        ran_prefill = (self._tick_budget is not None
-                       and self._tick_budget < self.prefill_chunk)
+        ran_prefill = self._tick_prefill_done > 0
         if ran_prefill:
             # fence the async chunk writes so the prefill/decode timer split
             # attributes device time to the phase that spent it
@@ -1065,6 +1243,7 @@ class ContinuousEngine:
             return n_active
         positions = np.asarray([s.pos if s.active else 0 for s in self.slots], np.int32)
         tokens = jnp.asarray(self._cur_token[:, None])
+        self._jit_calls_tick += 1
         if self.paged:
             tbl = np.where(decoding[:, None], self.tables.table, -1)
             logits, self.caches, routing_tree = self._decode(
@@ -1145,7 +1324,17 @@ class ContinuousEngine:
             if prefill_toks else 0.0,
             "retraces": retraces,
             "preemptions": self.preemptions,
+            # jitted-function invocations attributed to this tick (including
+            # submit-time admissions since the last record) — in batched mode
+            # the steady-state fused tick holds this at <= 2 primary calls
+            "jitted_calls": self._jit_calls_tick,
         }
+        self._g_jit_calls.set(self._jit_calls_tick)
+        self._jit_calls_tick = 0
+        if self.paged and self.prefill_mode == "batched":
+            m["batched_prefill_occupancy"] = round(self._batched_occ_tick, 4)
+            self._g_batch_occ.set(round(self._batched_occ_tick, 4))
+            self._batched_occ_tick = 0.0
         if routing is not None:
             self._g_r_drop.set(routing["dropped_frac"])
             self._g_r_ent.set(routing["entropy"])

@@ -244,6 +244,32 @@ class TestContracts:
         assert observed == pred, (observed, pred)
         assert eng.obs.watchdog.snapshot()["steady_retraces"] == 0
 
+    def test_predicted_equals_observed_compiles_batched(self):
+        """Same acceptance contract for the fused tick: in
+        ``prefill_mode="batched"`` the chunk family collapses to ONE
+        fixed-shape entry that compiles exactly once, and the prediction's
+        key set swaps accordingly (no first/cont keys at all)."""
+        cfg = make_reduced(all_configs()["glm4-9b"])
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = ContinuousEngine(cfg, params, slots=3, capacity=64, paged=True,
+                               page_size=16, prefix_sharing=True,
+                               prefill_chunk=32, prefill_mode="batched")
+        prompts = [[(i % 50) + 1 for i in range(n)] for n in (5, 20, 40)]
+        for p in prompts:
+            eng.submit(Request(prompt=p, max_new_tokens=4))
+        eng.run_until_done()
+        observed = {name: jit_cache_size(fn) or 0
+                    for name, (fn, _, _) in eng.jitted_functions().items()}
+        pred = predict_compiles(slots=3, capacity=64, page_size=16,
+                                prefill_chunk=32,
+                                workload=Workload((5, 20, 40), 4, 32),
+                                prefill_mode="batched")
+        assert "prefill_chunk_batched" in pred
+        assert "prefill_chunk_first" not in pred
+        assert pred["prefill_chunk_batched"] == 1
+        assert observed == pred, (observed, pred)
+        assert eng.obs.watchdog.snapshot()["steady_retraces"] == 0
+
     def test_watchdog_registry_matches_contract(self, tiny_engine):
         """One source of truth: the watchdog's primary classification equals
         the jit registry's, and every contract entry agrees."""

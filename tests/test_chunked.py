@@ -537,3 +537,94 @@ class TestAdmissionStateMachine:
             assert key in m, key
         assert any(r["prefill_tokens"] > 0 for r in eng.metrics_log)
         assert eng.prefill_tokens_total == 9
+
+
+# ---------------------------------------------------------------------------
+# Engine level: batched multi-slot prefill (the fused tick) vs per-slot chunked
+# ---------------------------------------------------------------------------
+
+
+class TestBatchedPrefillTick:
+    """``prefill_mode="batched"``: one fixed-shape jitted call advances EVERY
+    mid-prefill slot's next chunk per tick, so a steady tick issues at most
+    {one batched prefill, one batched decode}.  Padding rows must be inert by
+    construction (trash-page routing / ring scatter drops / dt=0 / a=1,b=0),
+    so outputs are token-identical to the per-slot chunked engine."""
+
+    @pytest.mark.parametrize("prefix", [False, True])
+    @pytest.mark.parametrize(
+        "arch", ["glm4-9b", "gemma3-27b", "recurrentgemma-2b"])
+    def test_batched_matches_chunked_greedy(self, arch, prefix):
+        """Acceptance: token-identical greedy outputs across fully-paged
+        (glm4), window-ring mix (gemma3), and LRU/SSM resume
+        (recurrentgemma), with prefix sharing on and off, under enough
+        concurrent admissions that several slots are mid-prefill at once."""
+        cfg = make_reduced(all_configs()[arch])
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.RandomState(0)
+        # 5 prompts onto 4 slots: the queued 5th repeats PRE, so it admits
+        # AFTER the prefix pages are indexed -> exercises a prefix hit under
+        # the batched tick (the first 4 admit before anything is indexed)
+        prompts = [PRE + [int(t) for t in rng.randint(1, 97, size=n)]
+                   for n in (13, 1)] + [[9, 8, 7], [1, 2]] + \
+                  [PRE + [int(t) for t in rng.randint(1, 97, size=5)]]
+        kw = dict(slots=4, capacity=32, paged=True, page_size=4,
+                  prefill_chunk=8, prefix_sharing=prefix)
+        want, _ = _serve(cfg, params, prompts, 6, prefill_mode="chunked", **kw)
+        got, eng = _serve(cfg, params, prompts, 6, prefill_mode="batched", **kw)
+        assert got == want, (got, want)
+        assert eng.pool.free_count == eng.n_pages
+        if prefix:
+            assert eng.prefix_hits >= 1
+        # several slots really were mid-prefill in one batched call
+        assert any(m.get("batched_prefill_occupancy", 0) > 0.25
+                   for m in eng.metrics_log)
+
+    def test_one_prefill_dispatch_per_tick(self, setup):
+        """>= 3 concurrent mid-prefill admissions advance in ONE batched
+        jitted call: steady ticks issue at most 2 primary dispatches
+        (batched prefill + decode), and the jitted-calls gauge proves it."""
+        cfg, params = setup
+        prompts = [[int(t) for t in np.arange(1, 22 + i)] for i in range(3)]
+        eng = ContinuousEngine(cfg, params, slots=4, capacity=32, paged=True,
+                               page_size=4, prefill_chunk=4,
+                               prefill_mode="batched")
+        for p in prompts:
+            eng.submit(Request(prompt=p, max_new_tokens=4))
+        eng.step()  # admission tick: all 3 join the one batched call
+        m = eng.last_metrics
+        assert m["prefill_tokens"] == 12  # 3 rows x 4-token chunk, one call
+        assert m["batched_prefill_occupancy"] == 0.75
+        # registry: the batched entry replaces the first/cont chunk family
+        # and is primary alongside decode
+        fns = eng.jitted_functions()
+        assert "prefill_chunk_batched" in fns
+        assert "prefill_chunk_first" not in fns and "prefill_chunk_cont" not in fns
+        primaries = [n for n, (_, _, p) in fns.items() if p]
+        assert sorted(primaries) == ["decode", "prefill_chunk_batched"]
+        eng.run_until_done()
+        # steady ticks (no admissions/releases): <= 2 jitted calls each
+        steady = [m for m in eng.metrics_log
+                  if m.get("prefill_tokens", 0) and m.get("tokens_this_tick")]
+        assert steady and all(m["jitted_calls"] <= 2 for m in steady)
+
+    def test_batched_requires_paged(self, setup):
+        cfg, params = setup
+        with pytest.raises(ValueError, match="batched.*paged"):
+            ContinuousEngine(cfg, params, slots=2, capacity=16,
+                             prefill_mode="batched")
+
+    def test_preemption_resumes_exactly(self, setup):
+        """Mid-prefill preemption under the batched tick resumes token-exact
+        (the reset flag rebuilds the victim's row state on re-admission)."""
+        cfg, params = setup
+        long = [int(t) for t in np.arange(1, 41)]
+        short = [5, 4, 3]
+        kw = dict(slots=2, capacity=48, paged=True, page_size=4, n_pages=14,
+                  prefill_chunk=4)  # tight pool forces a preemption
+        want, _ = _serve(cfg, params, [long, short], 4,
+                         prefill_mode="chunked", **kw)
+        got, eng = _serve(cfg, params, [long, short], 4,
+                          prefill_mode="batched", **kw)
+        assert got == want, (got, want)
+        assert eng.pool.free_count == eng.n_pages
