@@ -1,4 +1,4 @@
-.PHONY: test analyze test-quant test-paged test-prefix test-chunked test-obs test-grouped test-dist bench-quant bench-kv bench-paged bench-prefix bench-chunked bench-obs bench-fused-tick
+.PHONY: test analyze test-quant test-paged test-prefix test-chunked test-obs test-grouped test-dist test-dist-serving bench-quant bench-kv bench-paged bench-prefix bench-chunked bench-obs bench-fused-tick bench-ep-serving
 
 test:
 	sh scripts/ci.sh
@@ -29,6 +29,11 @@ test-dist:
 	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		python -m pytest -q -m dist tests/test_dist.py
 
+test-dist-serving:
+	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		python -m pytest -q -m dist tests/test_dist_serving.py \
+		tests/test_analysis.py::test_ep_engine_contract_closure
+
 bench-quant:
 	PYTHONPATH=src python -m benchmarks.run quant
 
@@ -49,3 +54,6 @@ bench-obs:
 
 bench-fused-tick:
 	PYTHONPATH=src python -m benchmarks.run fused_tick
+
+bench-ep-serving:
+	PYTHONPATH=src python -m benchmarks.run ep_serving

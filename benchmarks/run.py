@@ -42,6 +42,11 @@ Prints ``name,us_per_call,derived`` CSV rows.
              counts with the batched entry compiling once, tick p50/p99
              batched vs chunked, and capacity-padding vs grouped tile-padding
              dead expert FLOPs (JSON)
+  ep_serving — expert-parallel serving mesh: measured per-device parameter
+             bytes with experts sharded (4x2) vs single-device, the
+             aggregate expert-bandwidth multiplier, per-layer all-to-all /
+             all_gather exchange volume, and flat vs hierarchical two-hop
+             message counts (JSON)
 
 Run: PYTHONPATH=src python -m benchmarks.run [section ...]
 """
@@ -830,6 +835,96 @@ def fused_tick() -> None:
     }))
 
 
+def ep_serving() -> None:
+    """Expert-parallel serving topology (PR 9): what sharding the experts
+    over a serving mesh buys vs single-device.  (a) MEASURED per-device
+    parameter bytes on a (4, 2) ("pod", data) mesh — expert stacks sharded
+    ep-ways, attention/router replicated — via the real placement path
+    (subprocess under 8 fake CPU devices, `serving/ep.py`); (b) the
+    aggregate-bandwidth ledger: expert bytes each device reads per tick,
+    sharded vs single-device (the paper's §5 latency lever); (c) the
+    all-to-all exchange volume the sharding costs per MoE layer — decode's
+    replicated-token all_gather, prefill's token-sharded a2a — and the
+    flat vs hierarchical two-hop (Fig. 8) message count per device."""
+    import json
+    import os
+    import subprocess
+    import sys as _sys
+
+    from repro.core.gating import expert_capacity
+
+    script = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax, json
+from repro.configs.registry import all_configs, make_reduced, with_moe_ffn
+from repro.models.model import init_params
+from repro.serving.ep import build_serving_mesh, place_params, placed_param_bytes
+from repro.parallel.sharding import use_mesh
+
+E = 8
+cfg = with_moe_ffn(make_reduced(all_configs()["nlg-350m-moe128"]), num_experts=E)
+params = init_params(cfg, jax.random.PRNGKey(0))
+flat = jax.tree_util.tree_flatten_with_path(params)[0]
+total = sum(l.size * l.dtype.itemsize for _, l in flat)
+# expert stacks are the layer-stacked [L, E, d, f] moe mlp weights
+expert = sum(l.size * l.dtype.itemsize for kp, l in flat
+             if "moe" in jax.tree_util.keystr(kp)
+             and jax.tree_util.keystr(kp).split("'")[-2] in ("wi", "wg", "wo"))
+mesh, rules = build_serving_mesh((4, 2))
+with use_mesh(mesh, rules):
+    placed = place_params(mesh, rules, params)
+print(json.dumps({"total": total, "expert": expert,
+                  "per_dev": placed_param_bytes(placed)}))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([_sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    m = json.loads(r.stdout.strip().splitlines()[-1])
+    ep = 8
+    expect = (m["total"] - m["expert"]) + m["expert"] // ep
+    assert m["per_dev"] == expect, (m, expect)
+    emit("ep_serving_params_per_device", 0.0,
+         f"mesh=(4x2),{m['per_dev'] / 1e6:.2f}MB_of_{m['total'] / 1e6:.2f}MB,"
+         f"expert_shard={m['expert'] // ep / 1e6:.2f}MB(1/{ep})")
+    emit("ep_serving_expert_read_per_tick", 0.0,
+         f"sharded={m['expert'] // ep / 1e6:.2f}MB/device,"
+         f"single={m['expert'] / 1e6:.2f}MB:aggregate_bandwidth_x{ep}")
+
+    # (c) exchange volume per MoE layer per device, f32 reduced config
+    #     (E=8, K=2, d=128): decode = all_gather of the [E, C, d] output
+    #     buffer (each device contributes its E/ep slice); prefill chunk of
+    #     64 tokens = dispatch a2a out + combine a2a back
+    E, K, d, bytes_el = 8, 2, 128, 4
+    for T, phase in ((4, "decode_allgather"), (64, "prefill_a2a")):
+        if phase == "decode_allgather":
+            cap = expert_capacity(T, E, K, 8.0)
+            vol = (E - E // ep) * cap * d * bytes_el  # received per device
+        else:
+            cap = expert_capacity(T // ep, E, K, 8.0)  # per-shard gating
+            vol = 2 * (ep - 1) * (E // ep) * cap * d * bytes_el
+        emit(f"ep_serving_{phase}_volume", 0.0,
+             f"T={T},cap={cap},{vol / 1e3:.1f}KB/device/layer,single_device=0KB")
+    for shape in ((8,), (4, 2), (2, 4)):
+        n = 1
+        for s in shape:
+            n *= s
+        flat_msgs = n - 1
+        hier_msgs = sum(s - 1 for s in shape)
+        emit("ep_serving_a2a_messages", 0.0,
+             f"mesh={'x'.join(map(str, shape))},flat={flat_msgs},"
+             f"hierarchical={hier_msgs}_per_device(Fig8_two_hop)")
+
+    print("# ep_serving_metrics_json:", json.dumps({
+        "mesh": [4, 2], "ep_degree": ep,
+        "params_bytes": {"total": m["total"], "expert": m["expert"],
+                         "per_device": m["per_dev"]},
+    }))
+
+
 SECTIONS = {
     "table3": table3,
     "fig10": fig10,
@@ -846,6 +941,7 @@ SECTIONS = {
     "chunked_prefill": chunked_prefill,
     "obs": obs,
     "fused_tick": fused_tick,
+    "ep_serving": ep_serving,
 }
 
 

@@ -47,7 +47,8 @@ python -m pytest -q tests/test_chunked.py
 # (batched engine cases run inside test_chunked.py above)
 python -m pytest -q tests/test_grouped.py
 
-python -m pytest -x -q --ignore=tests/test_dist.py
+python -m pytest -x -q --ignore=tests/test_dist.py \
+    --ignore=tests/test_dist_serving.py
 
 # dist tier (jax-compat shim in parallel/compat.py + the dense-dispatch
 # partial-sum-gather fix keep it green; the marker lets it be selected /
@@ -55,3 +56,13 @@ python -m pytest -x -q --ignore=tests/test_dist.py
 # exporting here too covers any future in-process multi-device test.
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m pytest -q -m dist tests/test_dist.py
+
+# dist-serving tier: expert-parallel serving parity (sharded engine greedy
+# output token-identical to single-device across arch mixes, int8 KV,
+# grouped experts, batched prefill, prefix sharing, mesh shapes), the
+# routing/collective conservation fuzz, preemption pool-drain on a sharded
+# engine, the moe_dense multi-device guard, and the EP analysis-gate run
+# (contract closure + donation + missing-collective on the sharded registry)
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest -q -m dist tests/test_dist_serving.py \
+    tests/test_analysis.py::test_ep_engine_contract_closure

@@ -40,8 +40,12 @@ _ARG_RE = re.compile(r"%arg(\d+):\s*tensor<[^>]*>\s*(\{[^}]*\})?")
 
 
 def _entry_param_aliases(stablehlo_text: str) -> Dict[int, bool]:
-    """param index -> has an input-output alias, parsed from the lowered
-    module's entry function signature."""
+    """param index -> donation honored, parsed from the lowered module's
+    entry function signature.  Single-device lowerings resolve the alias
+    eagerly (``tf.aliasing_output = N``); multi-device lowerings mark the
+    parameter donatable (``jax.buffer_donor = true``) and leave the pairing
+    to compile time once shardings are fixed — both mean the donated buffer
+    will not double-allocate."""
     m = re.search(r"func\.func\s+public\s+@main\((.*?)\)\s*->", stablehlo_text,
                   re.DOTALL)
     if not m:
@@ -50,7 +54,7 @@ def _entry_param_aliases(stablehlo_text: str) -> Dict[int, bool]:
     for am in _ARG_RE.finditer(m.group(1)):
         idx = int(am.group(1))
         attrs = am.group(2) or ""
-        out[idx] = "tf.aliasing_output" in attrs
+        out[idx] = "tf.aliasing_output" in attrs or "jax.buffer_donor" in attrs
     return out
 
 

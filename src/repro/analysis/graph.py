@@ -170,6 +170,23 @@ def audit_dead_compute(jaxpr, name: str, *, num_tokens: int, num_experts: int,
         report.metrics[f"graph.{name}.padded_fraction"] = round(frac, 4)
         return report
     stats = capacity_dead_compute(num_tokens, num_experts, top_k, capacity_factor)
+    if impl in ("ep", "ep_serve"):
+        # expert-parallel dispatch: the expert dots run inside shard_map over
+        # per-shard [E_local, C, d] buffers, so a leading-dim == num_experts
+        # scan would only catch unrelated batch-leading dots (e.g. attention
+        # over num_slots == E).  Report the analytic padding and skip the
+        # graph cross-check.
+        report.add(
+            "capacity-padding", "info", name,
+            f"expert-parallel capacity dispatch: per-shard [E_local, "
+            f"C={stats['capacity']}] buffers inside shard_map, "
+            f">= {stats['padded_fraction']:.1%} capacity padding (analytic); "
+            "full-E graph cross-check skipped — E_local-leading dots are "
+            "indistinguishable from batch dims",
+        )
+        report.metrics[f"graph.{name}.expert_dots"] = 0
+        report.metrics[f"graph.{name}.padded_fraction"] = round(stats["padded_fraction"], 4)
+        return report
     expert_dots = 0
     expert_flops = 0.0
     graph_caps: set = set()
@@ -212,12 +229,20 @@ def audit_dead_compute(jaxpr, name: str, *, num_tokens: int, num_experts: int,
 
 def audit_graph(name: str, fn, args: Sequence, *, single_device: bool = True,
                 allowed_collectives: Sequence[str] = (),
+                expect_collectives: bool = False,
                 moe: Optional[Dict[str, Any]] = None,
                 report: Optional[Report] = None) -> Report:
     """Run all graph checks on ``fn`` traced at ``args`` (ShapeDtypeStructs
     are fine — tracing only, no compile).  ``moe`` carries the gating
     arithmetic for the dead-compute pass:
-    ``{num_tokens, num_experts, top_k, capacity_factor}``."""
+    ``{num_tokens, num_experts, top_k, capacity_factor}``.
+
+    ``single_device=False`` flips the collective check around: instead of
+    flagging strays, ``expect_collectives=True`` asserts the graph DOES
+    carry communication primitives — an expert-parallel serving graph whose
+    all-to-all/all-gather exchange silently traced away (mesh context lost,
+    EP impl fell back to a replicated kernel) would otherwise pass every
+    other audit while serving single-device math on every rank."""
     report = report if report is not None else Report()
     try:
         closed = jax.make_jaxpr(fn)(*args)
@@ -227,6 +252,17 @@ def audit_graph(name: str, fn, args: Sequence, *, single_device: bool = True,
         return report
     if single_device:
         audit_collectives(closed, name, report, allowed=allowed_collectives)
+    else:
+        n_coll = sum(1 for eqn in iter_eqns(closed)
+                     if eqn.primitive.name in COLLECTIVE_PRIMS)
+        report.metrics[f"graph.{name}.collectives"] = n_coll
+        if expect_collectives and n_coll == 0:
+            report.add(
+                "missing-collective", "error", name,
+                "multi-device EP serving graph contains no communication "
+                "primitive — the shard_map exchange traced away (lost mesh "
+                "context or a silent fallback to a replicated MoE kernel)",
+            )
     audit_dtype_drift(closed, name, report)
     if moe:
         audit_dead_compute(closed, name, report=report, **moe)

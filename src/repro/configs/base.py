@@ -242,6 +242,15 @@ class ModelConfig:
     #   "ep"      = dense dispatch + explicit expert-parallel all-to-all
     #               under shard_map (paper §5.2-5.3).
     moe_impl: str = "dense"
+    # --- expert-parallel serving mesh (serving/ep.py) ---
+    # () = single-device serving.  (8,) = flat EP over 8 devices.  (4, 2) =
+    # two-axis ("pod", ep_axis) mesh: hierarchical two-hop all-to-all (paper
+    # Fig. 8) when experts shard over both axes.  The engines build the mesh,
+    # place expert weights per-device, and rewrite moe_impl to the serving EP
+    # schedule ("ep_serve"/"ep_grouped"); the scheduler stays host-side and
+    # mesh-agnostic.
+    ep_mesh: Tuple[int, ...] = ()
+    ep_axis: str = "data"
 
     @property
     def num_layers(self) -> int:

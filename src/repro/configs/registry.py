@@ -118,6 +118,31 @@ def with_capacity_factor(cfg: ModelConfig, cf: float) -> ModelConfig:
     return cfg.replace(segments=seg_map(cfg.segments), encoder=enc)
 
 
+def with_moe_ffn(cfg: ModelConfig, **kw) -> ModelConfig:
+    """Rebuild a config with every MoE layer's FFNSpec fields overridden
+    (num_experts=8, capacity_factor=8.0, ...).  The EP serving tests use it
+    to make reduced expert counts divisible by a device mesh and to give the
+    a2a schedule drop-free capacity headroom."""
+    def seg_map(segs):
+        out = []
+        for seg in segs:
+            pat = tuple(
+                LayerSpec(
+                    ls.mixer,
+                    dataclasses.replace(ls.ffn, **kw) if ls.ffn.kind == "moe" else ls.ffn,
+                    cross=ls.cross,
+                )
+                for ls in seg.pattern
+            )
+            out.append(Segment(pat, seg.repeats))
+        return tuple(out)
+
+    enc = None
+    if cfg.encoder is not None:
+        enc = EncoderConfig(segments=seg_map(cfg.encoder.segments), max_source_len=cfg.encoder.max_source_len)
+    return cfg.replace(segments=seg_map(cfg.segments), encoder=enc)
+
+
 def make_reduced(cfg: ModelConfig, d_model: int = 128) -> ModelConfig:
     """Same family/pattern, tiny dims: one repeat of each segment pattern."""
     heads = 4

@@ -49,6 +49,22 @@ def moe_dense(x: jax.Array, g: Gating, capacity: int, num_experts: int, expert_f
     This is the GSPMD (non-shard_map) path; the EP implementation calls
     dispatch_dense/combine_dense directly inside its shard_map body instead.
     """
+    from repro.parallel.sharding import get_mesh
+
+    _mesh = get_mesh()
+    if _mesh is not None and _mesh.devices.size > 1:
+        # Documented XLA SPMD hazard: the partitioner mis-partitions the
+        # combine gather over the expert outputs' pending partial sums (and
+        # the grad program double-reduces regardless of the forward pin
+        # below).  Fail loudly instead of silently returning wrong numbers.
+        raise ValueError(
+            "moe_impl='dense' is numerically unsafe under a multi-device "
+            f"mesh ({_mesh.devices.size} devices): the XLA SPMD partitioner "
+            "mis-partitions the combine gather / double-reduces under grad. "
+            "Use moe_impl='ep' (training) or the serving EP schedules "
+            "('ep_serve'/'ep_grouped' via cfg.ep_mesh), or 'einsum'/'grouped' "
+            "for replicated execution."
+        )
     xe = dispatch_dense(x, g, capacity, num_experts)
     ye = expert_fn(xe)
     # Pin the expert outputs to a concrete replicated sharding BEFORE the
@@ -58,9 +74,7 @@ def moe_dense(x: jax.Array, g: Gating, capacity: int, num_experts: int, expert_f
     # backend: combine returned exactly TP× the correct values; the grad
     # program stays wrong regardless, which is why multi-device training
     # uses the shard_map EP path, not this one).  No-op without a mesh.
-    from repro.parallel.sharding import get_mesh
-
-    mesh = get_mesh()
+    mesh = _mesh
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec
 

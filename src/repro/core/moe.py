@@ -195,7 +195,49 @@ def moe_layer(
     E, K = spec.num_experts, spec.top_k
     stats = None
 
-    if impl == "ep" and get_mesh() is not None:
+    if impl in ("ep_serve", "ep_grouped"):
+        # Serving EP (core/moe_serve.py) needs an active mesh whose 'expert'
+        # rule axes divide E; otherwise degrade to the equivalent
+        # single-device kernel.  Under a live multi-device mesh the dense
+        # mapping-table path is guarded (dispatch.moe_dense raises), so the
+        # dense-family fallback there is the einsum dispatch.
+        from repro.core.moe_serve import serve_ep_axes
+
+        if serve_ep_axes(E) is None:
+            if impl == "ep_grouped":
+                impl = "grouped"
+            else:
+                impl = "einsum" if get_mesh() is not None else "dense"
+
+    if impl in ("ep_serve", "ep_grouped"):
+        from repro.core.moe_serve import moe_layer_ep_serve
+
+        if isinstance(params.get("wi"), QuantizedArray):
+            # shard_map in_specs address raw arrays (same rule as "ep"); the
+            # engines dequantize expert leaves ONCE at load time — this
+            # in-jit fallback only runs when a mesh appears after tracing.
+            from repro.quant.ptq import dequantize_params
+
+            params = {**params, **dequantize_params(
+                {k: params[k] for k in ("wi", "wg", "wo") if k in params}
+            )}
+        kernel = "grouped" if impl == "ep_grouped" else "dense"
+        y, aux = moe_layer_ep_serve(cfg, spec, params, x, kernel=kernel)
+        if with_stats:
+            # Router + gating re-run on the replicated token set outside
+            # shard_map.  For the replicated-token schedules (decode,
+            # grouped) this is EXACTLY the gating the sharded dispatch used
+            # (global capacity / dropless); for the a2a prefill schedule the
+            # drop accounting approximates the per-shard local capacity —
+            # the same documented caveat as the training "ep" path.
+            xs = x.reshape(B * S, D)
+            capacity = (
+                B * S * K if impl == "ep_grouped"
+                else expert_capacity(B * S, E, K, spec.capacity_factor)
+            )
+            logits = xs.astype(jnp.float32) @ params["router"]
+            stats = routing_stats(top_k_gating(logits, K, capacity), E)
+    elif impl == "ep" and get_mesh() is not None:
         from repro.core.moe_parallel import moe_layer_ep
 
         if isinstance(params.get("wi"), QuantizedArray):

@@ -20,7 +20,12 @@ anything executes on a device — and turns the findings into an exit code:
 Besides the ``--arch`` targets it also analyzes a fused-tick engine
 (``nlg-350m-moe128`` with ``moe_impl="grouped"`` + ``prefill_mode="batched"``)
 so the grouped dropless dispatch graph and the batched-prefill contract /
-compile-count prediction are gated too (``--no-fused`` skips it).
+compile-count prediction are gated too (``--no-fused`` skips it), and two
+expert-parallel serving-mesh engines (``nlg-350m-moe128`` over a (2, 2)
+hierarchical-a2a mesh, default + grouped/batched schedules) so the sharded
+jit registry's contracts, donations and collective structure are gated as
+well — re-exec'd under forced fake CPU devices when the host has fewer
+than 4 (``--no-ep`` skips it, ``--ep-only`` runs just these).
 
 Exit 0 = no unsuppressed errors (``--strict``: no warnings either).
 
@@ -71,20 +76,30 @@ def _moe_spec(cfg, num_tokens: int) -> Optional[dict]:
     f = _moe_ffn(cfg)
     if f is None:
         return None
+    impl = cfg.moe_impl
+    # the EP serving schedules keep the reference kernels' compute shape:
+    # ep_grouped is the grouped dropless layout (tile padding, no [E, C]
+    # buffer) and ep_serve's per-shard dots have leading dim E_local != E,
+    # so the capacity cross-check must not look for full-E buffers there.
+    if impl == "ep_grouped":
+        impl = "grouped"
     return {"num_tokens": num_tokens, "num_experts": f.num_experts,
             "top_k": f.top_k, "capacity_factor": f.capacity_factor,
-            "impl": cfg.moe_impl}
+            "impl": impl}
 
 
 def build_engines(arch: str, *, reduced: bool = True, slots: int = 4,
                   capacity: int = 128, page_size: int = 16,
                   static_ec: Optional[EngineConfig] = None,
                   moe_impl: Optional[str] = None,
-                  prefill_mode: str = "chunked"):
+                  prefill_mode: str = "chunked",
+                  ep_mesh: Sequence[int] = ()):
     """(ContinuousEngine paged+prefix, static Engine) for ``arch``.
     ``moe_impl`` overrides the config's dispatch implementation (the grouped
     dropless target); ``prefill_mode`` selects the admission state machine
-    ("chunked" default, "batched" = the fused-tick single-dispatch entry)."""
+    ("chunked" default, "batched" = the fused-tick single-dispatch entry);
+    ``ep_mesh`` builds the engines over an expert-parallel serving mesh
+    (``(2, 2)`` = hierarchical two-hop all-to-all topology)."""
     import dataclasses
 
     cfg = get_config(arch)
@@ -92,6 +107,8 @@ def build_engines(arch: str, *, reduced: bool = True, slots: int = 4,
         cfg = make_reduced(cfg)
     if moe_impl is not None:
         cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    if ep_mesh:
+        cfg = dataclasses.replace(cfg, ep_mesh=tuple(ep_mesh))
     params = init_params(cfg, jax.random.PRNGKey(0))
     cont = ContinuousEngine(
         cfg, params, slots=slots, capacity=capacity,
@@ -165,18 +182,24 @@ def analyze_rebinds(report: Report, donated_by_file: dict) -> None:
 def analyze_graphs(tag: str, engine, report: Report) -> None:
     """Pass 4 on one engine: collectives / dtype drift / dead compute in the
     decode graph (the steady-state tick) and, for the continuous engine, the
-    budget-length prefill chunk (the admission graph)."""
+    budget-length prefill chunk (the admission graph).  Engines built over an
+    expert-parallel serving mesh flip the collective check: their MoE graphs
+    must *contain* the shard_map token exchange (all_gather/psum/all_to_all)
+    rather than be free of it."""
     by_name = {e.name: e for e in engine.shape_contract()}
     cfg = engine.cfg
+    multi = getattr(engine, "_mesh", None) is not None
+    coll = dict(single_device=not multi,
+                expect_collectives=multi and _moe_ffn(cfg) is not None)
     dec = by_name["decode"]
     n_dec = engine.n_slots if isinstance(engine, ContinuousEngine) else engine.ec.max_batch
     audit_graph(f"{tag}.decode", dec.fn, dec.make(*dec.sample[-1]),
-                moe=_moe_spec(cfg, n_dec), report=report)
+                moe=_moe_spec(cfg, n_dec), report=report, **coll)
     chunk = by_name.get("prefill_chunk_first")
     if chunk is not None:
         pt = chunk.sample[-1]
         audit_graph(f"{tag}.prefill_chunk", chunk.fn, chunk.make(*pt),
-                    moe=_moe_spec(cfg, pt[0]), report=report)
+                    moe=_moe_spec(cfg, pt[0]), report=report, **coll)
         return
     # batched fused-tick engines build one fixed-shape prefill entry instead
     # of the first/cont chunk family; its sample point is the singleton ()
@@ -185,15 +208,16 @@ def analyze_graphs(tag: str, engine, report: Report) -> None:
         nt = engine.n_slots * engine.prefill_chunk
         audit_graph(f"{tag}.prefill_chunk_batched", batched.fn,
                     batched.make(*batched.sample[-1]),
-                    moe=_moe_spec(cfg, nt), report=report)
+                    moe=_moe_spec(cfg, nt), report=report, **coll)
 
 
 def analyze_arch(arch: str, report: Report, *, reduced: bool = True,
                  passes: Sequence[str] = ("contract", "donation", "graph"),
                  moe_impl: Optional[str] = None,
-                 prefill_mode: str = "chunked", tag: str = "") -> None:
+                 prefill_mode: str = "chunked", tag: str = "",
+                 ep_mesh: Sequence[int] = ()) -> None:
     cont, stat = build_engines(arch, reduced=reduced, moe_impl=moe_impl,
-                               prefill_mode=prefill_mode)
+                               prefill_mode=prefill_mode, ep_mesh=ep_mesh)
     base = f"{arch}{tag}"
     for tag, eng in ((f"{base}.continuous", cont), (f"{base}.static", stat)):
         if "contract" in passes:
@@ -218,6 +242,53 @@ def donated_call_sites() -> dict:
     }
 
 
+# the EP serving gate shards experts over this many fake CPU devices when
+# the host has fewer real ones (the (2, 2) mesh exercises the hierarchical
+# two-hop all-to-all topology on the reduced 4-expert configs)
+_EP_DEVICES = 4
+_EP_MESH = (2, 2)
+
+
+def analyze_ep(report: Report, *, reduced: bool = True,
+               passes: Sequence[str] = ("contract", "donation", "graph")) -> None:
+    """EP serving targets: experts sharded over a (2, 2) ("pod", ep_axis)
+    mesh for both the default serving schedule (replicated-token decode +
+    a2a-sharded prefill) and the grouped dropless kernel with batched
+    prefill.  Gates that the sharded jit registry abstract-traces, donates,
+    and that its MoE graphs actually carry the token-exchange collectives."""
+    analyze_arch("nlg-350m-moe128", report, reduced=reduced, passes=passes,
+                 tag="+ep", ep_mesh=_EP_MESH)
+    analyze_arch("nlg-350m-moe128", report, reduced=reduced, passes=passes,
+                 moe_impl="grouped", prefill_mode="batched",
+                 tag="+ep-grouped", ep_mesh=_EP_MESH)
+
+
+def _reexec_ep(args) -> int:
+    """Re-run this module with ``--ep-only`` in a subprocess that forces
+    enough fake CPU devices for the EP mesh (the parent's jax backend is
+    already initialized single-device, so the flag can't be set in-process)."""
+    import subprocess
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={_EP_DEVICES}").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    cmd = [sys.executable, "-m", "repro.launch.analyze", "--ep-only"]
+    if args.full:
+        cmd.append("--full")
+    if args.strict:
+        cmd.append("--strict")
+    if args.show_suppressed:
+        cmd.append("--show-suppressed")
+    if args.skip:
+        cmd += ["--skip", *args.skip]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    sys.stdout.write(proc.stdout)
+    if proc.returncode and proc.stderr:
+        sys.stderr.write(proc.stderr)
+    return proc.returncode
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", nargs="*", default=list(DEFAULT_ARCHS),
@@ -233,29 +304,47 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--no-fused", action="store_true",
                     help="skip the grouped-MoE + batched-prefill fused-tick "
                          "engine target")
+    ap.add_argument("--no-ep", action="store_true",
+                    help="skip the expert-parallel serving-mesh engine targets")
+    ap.add_argument("--ep-only", action="store_true",
+                    help="run only the EP targets (used by the self-re-exec "
+                         "under forced fake devices; skips lint/rebind)")
     args = ap.parse_args(argv)
 
     report = Report()
-    if "lint" not in args.skip:
-        report.extend(lint_tree(_pkg_root()))
-    if "rebind" not in args.skip:
-        analyze_rebinds(report, donated_call_sites())
     engine_passes = tuple(p for p in ("contract", "donation", "graph")
                           if p not in args.skip)
-    if engine_passes:
-        for arch in args.arch:
-            analyze_arch(arch, report, reduced=not args.full,
-                         passes=engine_passes)
-        if not args.no_fused:
-            # the fused-tick configuration the PR 8 work is measured against:
-            # grouped (dropless) expert dispatch + single batched prefill call
-            analyze_arch("nlg-350m-moe128", report, reduced=not args.full,
-                         passes=engine_passes, moe_impl="grouped",
-                         prefill_mode="batched", tag="+fused")
+    if not args.ep_only:
+        if "lint" not in args.skip:
+            report.extend(lint_tree(_pkg_root()))
+        if "rebind" not in args.skip:
+            analyze_rebinds(report, donated_call_sites())
+        if engine_passes:
+            for arch in args.arch:
+                analyze_arch(arch, report, reduced=not args.full,
+                             passes=engine_passes)
+            if not args.no_fused:
+                # the fused-tick configuration the PR 8 work is measured
+                # against: grouped (dropless) expert dispatch + single
+                # batched prefill call
+                analyze_arch("nlg-350m-moe128", report, reduced=not args.full,
+                             passes=engine_passes, moe_impl="grouped",
+                             prefill_mode="batched", tag="+fused")
+    ep_rc = 0
+    if engine_passes and not args.no_ep:
+        if jax.device_count() >= _EP_DEVICES:
+            analyze_ep(report, reduced=not args.full, passes=engine_passes)
+        elif args.ep_only:
+            report.add("ep-devices", "error", "ep",
+                       f"--ep-only needs >= {_EP_DEVICES} devices, have "
+                       f"{jax.device_count()} (set XLA_FLAGS="
+                       f"--xla_force_host_platform_device_count={_EP_DEVICES})")
+        else:
+            ep_rc = _reexec_ep(args)
     print(report.render(show_suppressed=args.show_suppressed))
     failed = report.failed(strict=args.strict)
     print("analyze:", "FAIL" if failed else "OK")
-    return 1 if failed else 0
+    return 1 if (failed or ep_rc) else 0
 
 
 if __name__ == "__main__":

@@ -119,6 +119,15 @@ def main() -> None:
                     help="parallel samples per prompt (paged continuous "
                          "engine); with --prefix-sharing the samples share "
                          "ALL prompt pages and diverge via copy-on-write")
+    ap.add_argument("--ep-devices", default=None, metavar="N[xM]",
+                    help="expert-parallel serving mesh: '8' shards experts "
+                         "flat over 8 devices, '4x2' builds a (hosts, "
+                         "devices-per-host) mesh whose MoE exchange is the "
+                         "hierarchical two-hop all-to-all (paper Fig. 8). "
+                         "Expert weights place per-device, attention runs "
+                         "data-parallel over slots; the scheduler stays "
+                         "host-side.  CPU testing: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     args = ap.parse_args()
     if args.prefix_sharing and not args.paged:
         ap.error("--prefix-sharing requires --paged (block tables)")
@@ -152,6 +161,21 @@ def main() -> None:
                      "layers to dispatch — pick an MoE arch (e.g. "
                      "nlg-350m-moe128) or drop the flag")
         cfg = cfg.replace(moe_impl=args.moe_impl)
+    if args.ep_devices:
+        from repro.serving.ep import parse_ep_mesh
+
+        try:
+            shape = parse_ep_mesh(args.ep_devices)
+        except ValueError as e:
+            ap.error(str(e))
+        ndev = 1
+        for n in shape:
+            ndev *= n
+        if ndev > len(jax.devices()):
+            ap.error(f"--ep-devices {args.ep_devices}: needs {ndev} devices, "
+                     f"only {len(jax.devices())} visible (CPU: XLA_FLAGS="
+                     f"--xla_force_host_platform_device_count={ndev})")
+        cfg = cfg.replace(ep_mesh=shape)
 
     params = init_params(cfg, jax.random.PRNGKey(0))
 
@@ -215,6 +239,12 @@ def main() -> None:
     )
     obs = Obs(trace=bool(args.trace_out), routing=args.obs_routing)
     eng = None if args.paged else Engine(cfg, params, ec, obs=obs)
+    if eng is not None and eng._mesh is not None:
+        from repro.serving.ep import placed_param_bytes
+
+        print(f"EP serving mesh {dict(zip(eng._mesh.axis_names, eng._mesh.devices.shape))}: "
+              f"moe_impl={eng.cfg.moe_impl}, "
+              f"{placed_param_bytes(eng.params)/1e6:.1f}MB params/device")
     if args.kv_bits and eng is not None:
         from repro.models.model import init_caches
         from repro.quant import kv_cache_bytes
@@ -265,6 +295,13 @@ def main() -> None:
         print(f"paged pool: {ceng.n_pages} pages x {ceng.page_size} tokens "
               f"({paged_b/1e6:.2f}MB) vs contiguous {slots} x {capacity} "
               f"({contig_b/1e6:.2f}MB)")
+        if ceng._mesh is not None:
+            from repro.serving.ep import placed_param_bytes
+
+            print(f"EP serving mesh "
+                  f"{dict(zip(ceng._mesh.axis_names, ceng._mesh.devices.shape))}: "
+                  f"moe_impl={ceng.cfg.moe_impl}, "
+                  f"{placed_param_bytes(ceng.params)/1e6:.1f}MB params/device")
         # warmup (compile prefill + decode; the request completes, so the
         # pool and metrics window start clean apart from the tick counter)
         ceng.submit(Request(prompt=reqs[0].prompt, max_new_tokens=2))

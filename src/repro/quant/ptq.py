@@ -93,7 +93,7 @@ def prepare_params_for_serving(cfg, params: Any) -> Any:
     fallback still keeps results correct, just without the bytes win.)"""
     from repro.parallel.sharding import get_mesh
 
-    if getattr(cfg, "moe_impl", None) != "ep" or get_mesh() is None:
+    if getattr(cfg, "moe_impl", None) not in ("ep", "ep_serve", "ep_grouped") or get_mesh() is None:
         return params
 
     def visit(path, leaf):

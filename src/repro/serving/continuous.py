@@ -229,10 +229,23 @@ class ContinuousEngine:
                 "prefill_mode='batched' requires paged=True: the batched chunk "
                 "prefill writes directly into pool pages through block tables"
             )
-        self.cfg = cfg
         from repro.quant import prepare_params_for_serving
+        from repro.serving.ep import MeshCall, init_engine_mesh, place_params
 
-        self.params = prepare_params_for_serving(cfg, params)
+        # EP serving mesh (cfg.ep_mesh): resolve BEFORE cfg is captured by
+        # the jit closures below — the mesh rewrites moe_impl to the
+        # shard_map serving schedule (serving/ep.py, core/moe_serve.py).
+        self._mesh, self._mesh_rules, cfg = init_engine_mesh(cfg)
+        self.cfg = cfg
+
+        if self._mesh is not None:
+            from repro.parallel.sharding import use_mesh
+
+            with use_mesh(self._mesh, self._mesh_rules):
+                placed = prepare_params_for_serving(cfg, params)
+            self.params = place_params(self._mesh, self._mesh_rules, placed)
+        else:
+            self.params = prepare_params_for_serving(cfg, params)
         self.n_slots = slots
         self.capacity = capacity
         self.temperature = temperature
@@ -283,6 +296,16 @@ class ContinuousEngine:
             # ~4x more slot-capacity per byte of cache memory; admission
             # prefill and ragged decode quantize on write
             self.caches = init_caches(cfg, slots, capacity, kv_bits=kv_cache_bits)
+        if self._mesh is not None:
+            # slot (batch) dim data-parallel over the EP axes when divisible;
+            # pool pages + block-table state replicated (each rank reads only
+            # its slots' pages — the host scheduler stays mesh-agnostic)
+            from repro.serving.ep import place_caches
+
+            self.caches = place_caches(
+                self._mesh, self._mesh_rules, self.caches, slots=slots,
+                n_pages=self.n_pages if paged else None,
+            )
         self.slots = [SlotState() for _ in range(slots)]
         self.queue: List[_Pending] = []
         self.done: Dict[int, Response] = {}
@@ -475,6 +498,15 @@ class ContinuousEngine:
                 "copy_page": (self._copy_page, (0,), False),
                 "copy_slot": (self._copy_slot, (0,), False),
             })
+        if self._mesh is not None:
+            # every entry point (execution, lower, eval_shape) runs under the
+            # serving mesh; attribute forwarding keeps the watchdog's
+            # _cache_size probe and the analysis gate working unchanged
+            for _name in list(self._jit_registry):
+                _fn, _don, _primary = self._jit_registry[_name]
+                _w = MeshCall(_fn, self._mesh, self._mesh_rules)
+                self._jit_registry[_name] = (_w, _don, _primary)
+                setattr(self, "_" + _name, _w)
         wd = self.obs.watchdog
         for _name, (_fn, _don, _primary) in self._jit_registry.items():
             wd.register(_name, _fn, aux=not _primary)

@@ -72,10 +72,24 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, ec: EngineConfig, *, memory=None,
                  prefix_embeds=None, obs=None):
-        self.cfg = cfg
         from repro.quant import prepare_params_for_serving
+        from repro.serving.ep import MeshCall, init_engine_mesh, place_params
 
-        self.params = params = prepare_params_for_serving(cfg, params)
+        # EP serving mesh (cfg.ep_mesh): resolve BEFORE cfg is captured by
+        # the jit closures below — the mesh rewrites moe_impl to the
+        # shard_map serving schedule (serving/ep.py, core/moe_serve.py).
+        self._mesh, self._mesh_rules, cfg = init_engine_mesh(cfg)
+        self.cfg = cfg
+
+        if self._mesh is not None:
+            from repro.parallel.sharding import use_mesh
+
+            with use_mesh(self._mesh, self._mesh_rules):
+                params = prepare_params_for_serving(cfg, params)
+            params = place_params(self._mesh, self._mesh_rules, params)
+            self.params = params
+        else:
+            self.params = params = prepare_params_for_serving(cfg, params)
         self.ec = ec
         self.memory = memory
         self.prefix_embeds = prefix_embeds
@@ -133,6 +147,15 @@ class Engine:
         # counted into serve.retraces
         self._jit_registry = {"decode": (self._decode, (3,), False),
                               "prefill": (self._prefill, (2,), False)}
+        if self._mesh is not None:
+            # every entry point (execution, lower, eval_shape) runs under the
+            # serving mesh; attribute forwarding keeps the watchdog's
+            # _cache_size probe and the analysis gate working unchanged
+            for _name in list(self._jit_registry):
+                _fn, _don, _primary = self._jit_registry[_name]
+                _w = MeshCall(_fn, self._mesh, self._mesh_rules)
+                self._jit_registry[_name] = (_w, _don, _primary)
+                setattr(self, "_" + _name, _w)
         for _name, (_fn, _don, _primary) in self._jit_registry.items():
             self.obs.watchdog.register(_name, _fn, aux=not _primary)
 

@@ -333,6 +333,40 @@ class TestGraphAudit:
         rep = audit_graph("decode", entry.fn, entry.make(*entry.sample[-1]))
         assert not rep.errors, rep.render()
 
+    def test_expect_collectives(self):
+        """The EP inverse of the stray-collective check: a multi-device MoE
+        serving graph with NO communication primitive means the shard_map
+        exchange silently traced away."""
+        f = jax.pmap(lambda x: jax.lax.psum(x, "i"), axis_name="i")
+        rep = audit_graph("ep", f, (jnp.ones((1, 4)),), single_device=False,
+                          expect_collectives=True)
+        assert not rep.errors, rep.render()
+        assert rep.metrics["graph.ep.collectives"] == 1
+        rep = audit_graph("ep0", lambda x: x + 1, (jnp.ones((4,)),),
+                          single_device=False, expect_collectives=True)
+        assert [f_.rule for f_ in rep.errors] == ["missing-collective"]
+        # multi-device without the expectation (dense arch): just the metric
+        rep = audit_graph("ep1", lambda x: x + 1, (jnp.ones((4,)),),
+                          single_device=False)
+        assert not rep.errors and rep.metrics["graph.ep1.collectives"] == 0
+
+    def test_ep_dead_compute_skips_full_e_crosscheck(self):
+        """Under ``impl="ep_serve"`` the expert dots run per-shard inside
+        shard_map ([E_local, C] buffers), so a leading-dim==E scan would only
+        catch unrelated batch dots (e.g. attention over n_slots == E) — the
+        audit must report the analytic padding and skip the cross-check."""
+        E, C, d, f = 4, 8, 16, 32
+        experts = lambda x, w: jnp.einsum("ecd,edf->ecf", x, w)
+        closed = jax.make_jaxpr(experts)(
+            SDS((E, C, d), jnp.float32), SDS((E, d, f), jnp.float32))
+        # same graph/arithmetic that trips capacity-mismatch under "einsum"
+        # (T=32 -> analytic cap 16 != graph's 8) stays clean under EP
+        rep = audit_dead_compute(closed, "ep", num_tokens=32, num_experts=E,
+                                 top_k=1, capacity_factor=2.0, impl="ep_serve")
+        assert not rep.errors, rep.render()
+        assert [f_.rule for f_ in rep.active("info")] == ["capacity-padding"]
+        assert rep.metrics["graph.ep.expert_dots"] == 0
+
 
 INT4_HLO = """\
 HloModule int4_regression
@@ -384,3 +418,25 @@ def test_contract_checker_whole_registry(arch):
         for eng in (cont, stat):
             check_contract(eng.shape_contract(), rep)
     assert not rep.errors, rep.render()
+
+
+@pytest.mark.dist
+def test_ep_engine_contract_closure():
+    """The sharded jit registry's compile-shape contract is closed and the
+    full ``--ep-only`` gate (contract + closure + donation + graph, incl.
+    the missing-collective check) passes on the expert-parallel serving
+    engines.  Subprocess under forced fake devices, like tests/test_dist.py
+    — the main pytest process keeps its single CPU device."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.analyze", "--ep-only"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, \
+        f"EP analyze gate failed:\n{r.stdout[-3000:]}\n{r.stderr[-2000:]}"
+    assert "analyze: OK" in r.stdout
