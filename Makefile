@@ -1,4 +1,4 @@
-.PHONY: test analyze test-quant test-paged test-prefix test-chunked test-obs test-grouped test-dist test-dist-serving bench-quant bench-kv bench-paged bench-prefix bench-chunked bench-obs bench-fused-tick bench-ep-serving
+.PHONY: test analyze test-quant test-paged test-prefix test-chunked test-obs test-grouped test-spec test-dist test-dist-serving bench-quant bench-kv bench-paged bench-prefix bench-chunked bench-obs bench-fused-tick bench-ep-serving bench-spec
 
 test:
 	sh scripts/ci.sh
@@ -24,6 +24,13 @@ test-obs:
 test-grouped:
 	PYTHONPATH=src python -m pytest -q tests/test_grouped.py \
 		tests/test_chunked.py::TestBatchedPrefillTick
+
+test-spec:
+	PYTHONPATH=src python -m pytest -q tests/test_spec.py \
+		tests/test_kv_pool_prop.py::TestSpecRunHelpers \
+		tests/test_kv_pool_prop.py::test_spec_window_trace_invariants \
+		tests/test_obs.py::TestSpeculationObs \
+		tests/test_analysis.py::test_predicted_equals_observed_compiles_spec
 
 test-dist:
 	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -57,3 +64,6 @@ bench-fused-tick:
 
 bench-ep-serving:
 	PYTHONPATH=src python -m benchmarks.run ep_serving
+
+bench-spec:
+	PYTHONPATH=src python -m benchmarks.run spec

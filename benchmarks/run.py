@@ -47,6 +47,13 @@ Prints ``name,us_per_call,derived`` CSV rows.
              aggregate expert-bandwidth multiplier, per-layer all-to-all /
              all_gather exchange volume, and flat vs hierarchical two-hop
              message counts (JSON)
+  spec     — draft-then-verify speculative decoding over CoW page forks:
+             accepted tokens per verify pass with a same-family drafter
+             (ASSERTS > 1), the fresh-init low-accept rollback contrast
+             (token-exact either way), target forward passes per emitted
+             token vs the non-speculative baseline, decode-tick p50/p99
+             for all three engines, and the fork-page commit/rollback
+             ledger (JSON)
 
 Run: PYTHONPATH=src python -m benchmarks.run [section ...]
 """
@@ -925,6 +932,118 @@ print(json.dumps({"total": total, "expert": expert,
     }))
 
 
+def spec() -> None:
+    """Draft-then-verify speculative decoding over CoW page forks (PR 10):
+    (a) accepted tokens per verify pass with a same-family (self) drafter —
+    ASSERTS > 1.0, i.e. each batched target forward emits more than one
+    token; (b) the fresh-init drafter contrast — near-zero accept, every
+    window's fork pages rolled back, output still token-exact greedy;
+    (c) target forward passes per emitted token, speculative vs the
+    non-speculative baseline on the same traffic (the paper-level win:
+    the expensive MoE model runs once per window, not once per token);
+    (d) decode-tick wall-clock p50/p99 for all three engines plus the
+    fork-page commit/rollback ledger from the metrics registry (JSON)."""
+    import json
+    import numpy as np
+
+    from repro.core.prmoe import nlg_moe
+    from repro.models.model import init_params
+    from repro.obs import Obs
+    from repro.serving.continuous import ContinuousEngine
+    from repro.serving.engine import Request
+
+    # dropless grouped dispatch: capacity-factor dropping is batch-size
+    # dependent (a k+1-token verify pass would route differently from the
+    # baseline's one-token decode), so greedy parity needs moe_impl=grouped
+    cfg = nlg_moe("spec-bench", 4, 256, 4, 16, vocab=1024).replace(
+        param_dtype="float32", compute_dtype="float32", moe_impl="grouped")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fresh = init_params(cfg, jax.random.PRNGKey(1))
+    k, slots, n_new = 4, 3, 32
+    rng = jax.random.PRNGKey(2)
+    prompts = [jax.random.randint(jax.random.fold_in(rng, i), (n,), 0,
+                                  cfg.vocab_size).tolist()
+               for i, n in enumerate((12, 9, 17))]
+
+    def run(spec_draft):
+        kw = dict(slots=slots, capacity=64, paged=True, page_size=4,
+                  obs=Obs())
+        if spec_draft is not None:
+            kw.update(spec_draft=spec_draft, spec_k=k)
+        eng = ContinuousEngine(cfg, params, **kw)
+        out = []
+        for _ in range(2):  # wave 0 warms every jit, wave 1 is measured
+            eng.metrics_log.clear()
+            ids = [eng.submit(Request(prompt=p, max_new_tokens=n_new))
+                   for p in prompts]
+            done = eng.run_until_done()
+            out = [done[i].tokens for i in ids]
+        return eng, out
+
+    engines = {"baseline": run(None), "self_draft": run((cfg, params)),
+               "fresh_draft": run((cfg, fresh))}
+    base_out = engines["baseline"][1]
+    for name, (_, out) in engines.items():
+        assert out == base_out, f"{name} diverged from greedy baseline"
+
+    # (a)/(b) accept accounting from the engine's own per-tick spec metrics
+    totals = {}
+    for name in ("self_draft", "fresh_draft"):
+        eng = engines[name][0]
+        s = [m["spec"] for m in eng.metrics_log if m.get("spec")]
+        t = {f: sum(m.get(f, 0) for m in s)
+             for f in ("windows", "drafted", "accepted", "emitted", "resyncs")}
+        totals[name] = t
+        tpv = t["emitted"] / t["windows"]
+        rate = t["accepted"] / max(t["drafted"], 1)
+        c = eng.obs.metrics.snapshot()["counters"]
+        emit(f"spec_tokens_per_verify_{name}", 0.0,
+             f"{tpv:.2f}tok/verify(k={k},accept_rate={rate:.2f},"
+             f"windows={t['windows']},committed_pages="
+             f"{c['spec.committed_pages']},rolled_back_pages="
+             f"{c['spec.rolled_back_pages']})")
+    self_tpv = totals["self_draft"]["emitted"] / totals["self_draft"]["windows"]
+    fresh_tpv = (totals["fresh_draft"]["emitted"]
+                 / totals["fresh_draft"]["windows"])
+    assert self_tpv > 1.0, (
+        "same-family drafter must accept >1 token per verify pass", self_tpv)
+    assert fresh_tpv < self_tpv, (fresh_tpv, self_tpv)
+
+    # (c) target forward passes per emitted token: the baseline decodes one
+    # token per (batched) tick; the speculative engine emits a whole window
+    # per verify pass.  Per-slot passes = windows / emitted.
+    base_ticks = [m for m in engines["baseline"][0].metrics_log
+                  if m["tokens_this_tick"]]
+    emit("spec_target_passes_per_token", 0.0,
+         f"baseline=1.00,self_draft="
+         f"{totals['self_draft']['windows'] / totals['self_draft']['emitted']:.2f},"
+         f"fresh_draft="
+         f"{totals['fresh_draft']['windows'] / totals['fresh_draft']['emitted']:.2f}")
+
+    # (d) decode-tick wall-clock (spec ticks carry draft + verify + commit)
+    stats = {}
+    for name, (eng, _) in engines.items():
+        ts = np.asarray([m["tick_s"] for m in eng.metrics_log
+                         if m["tokens_this_tick"]]) * 1e6
+        stats[name] = {"p50": float(np.percentile(ts, 50)),
+                       "p99": float(np.percentile(ts, 99)),
+                       "ticks": len(ts)}
+        emit(f"spec_decode_tick_p50_{name}", stats[name]["p50"],
+             f"p99={stats[name]['p99']:.0f}us,ticks={len(ts)}")
+    assert len(base_ticks) > totals["self_draft"]["windows"] / slots, (
+        "speculation must need fewer target passes than baseline ticks")
+
+    print("# spec_metrics_json:", json.dumps({
+        "config": {"k": k, "slots": slots, "page_size": 4,
+                   "max_new_tokens": n_new,
+                   "prompt_lens": [len(p) for p in prompts]},
+        "totals": totals,
+        "tokens_per_verify": {"self_draft": self_tpv,
+                              "fresh_draft": fresh_tpv},
+        "tick_us": stats,
+    }))
+
+
 SECTIONS = {
     "table3": table3,
     "fig10": fig10,
@@ -942,6 +1061,7 @@ SECTIONS = {
     "obs": obs,
     "fused_tick": fused_tick,
     "ep_serving": ep_serving,
+    "spec": spec,
 }
 
 

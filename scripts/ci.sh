@@ -47,6 +47,20 @@ python -m pytest -q tests/test_chunked.py
 # (batched engine cases run inside test_chunked.py above)
 python -m pytest -q tests/test_grouped.py
 
+# speculation stage: draft-then-verify decoding over CoW page forks —
+# token-exact greedy parity vs the non-speculative engine across arch
+# families / int8 KV / prefix sharing / chunked+batched admission, window
+# geometry (k=1, page-boundary spans, budget clamps, mid-window eos),
+# preemption + fork admissions mid-speculation, the pool-level fork
+# commit/rollback run-helper properties + window-trace fuzz, the spec
+# metrics/span observability asserts, and the predicted==observed verify
+# compile-count contract
+python -m pytest -q tests/test_spec.py \
+    tests/test_kv_pool_prop.py::TestSpecRunHelpers \
+    tests/test_kv_pool_prop.py::test_spec_window_trace_invariants \
+    tests/test_obs.py::TestSpeculationObs \
+    tests/test_analysis.py::test_predicted_equals_observed_compiles_spec
+
 python -m pytest -x -q --ignore=tests/test_dist.py \
     --ignore=tests/test_dist_serving.py
 

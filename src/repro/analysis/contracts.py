@@ -206,7 +206,8 @@ def check_closure(entries: Sequence[ContractEntry], *, capacity: int,
 def predict_compiles(*, slots: int, capacity: int, page_size: int,
                      prefill_chunk: int, workload: Workload,
                      prefill_mode: str = "chunked",
-                     skip_shared_compute: bool = True) -> Dict[str, int]:
+                     skip_shared_compute: bool = True,
+                     spec: Optional[dict] = None) -> Dict[str, int]:
     """Per-function compile counts the workload will pay, by replaying the
     scheduler's admission/decode arithmetic host-side (no tracing, no
     device).  Keys match the engine's jit registry / the retrace watchdog's
@@ -228,7 +229,21 @@ def predict_compiles(*, slots: int, capacity: int, page_size: int,
     ``[slots, prefill_chunk]``, so it compiles at most once no matter the
     workload (admission itself launches no compute; every mid-prefill slot
     advances one chunk per tick); "scatter" predicts one ``prefill`` compile
-    per distinct context length."""
+    per distinct context length.
+
+    ``spec`` (a dict, ``{"commit_pass": bool}``) switches the decode side to
+    draft-then-verify speculation: every decode tick becomes one fixed-shape
+    ``verify`` + ``draft_propose`` + ``spec_reset_tail`` call (plus one
+    ``spec_commit`` when the target arch carries non-paged recurrent state —
+    ``commit_pass``), so each key compiles at most once; the one-token
+    ``decode`` entry stays registered but is never called.  The drafter's
+    lazy per-slot prefill traces one signature per distinct context length.
+    Compile counts are accept-rate-INDEPENDENT (every per-tick shape is
+    fixed at ``[slots, k+1]``), but tick/completion TIMING is not — callers
+    asserting predicted==observed live must use a drafter whose accept
+    pattern they control (the self-draft oracle: full accepts, no rollback,
+    which also keeps ``reset_pages`` = "1 iff completions" exact, since
+    completions are the only page-freeing events left)."""
     budget_tokens = max(1, min(workload.max_new, capacity - 1))
     keep = capacity - budget_tokens
 
@@ -346,4 +361,20 @@ def predict_compiles(*, slots: int, capacity: int, page_size: int,
     else:
         out["prefill_chunk_first"] = len(first_lens)
         out["prefill_chunk_cont"] = len(cont_lens)
+    if spec is not None:
+        # speculation replaces the one-token decode step with the fixed-shape
+        # verify/propose/reset-tail triple; `decode` stays in the registry
+        # (shape-contracted, never dispatched).  The drafter lazily prefills
+        # each slot's context once — one compile per distinct context length
+        # (clamped the same way the queue above was).
+        v = out["decode"]
+        out["decode"] = 0
+        out["verify"] = v
+        out["draft_propose"] = v
+        out["spec_reset_tail"] = v
+        if spec.get("commit_pass"):
+            out["spec_commit"] = v
+        out["draft_prefill"] = (
+            len({min(max(p, 1), max(keep, 1)) for p in workload.prompt_lens})
+            if v else 0)
     return out

@@ -93,13 +93,15 @@ def build_engines(arch: str, *, reduced: bool = True, slots: int = 4,
                   static_ec: Optional[EngineConfig] = None,
                   moe_impl: Optional[str] = None,
                   prefill_mode: str = "chunked",
-                  ep_mesh: Sequence[int] = ()):
+                  ep_mesh: Sequence[int] = (), spec: bool = False):
     """(ContinuousEngine paged+prefix, static Engine) for ``arch``.
     ``moe_impl`` overrides the config's dispatch implementation (the grouped
     dropless target); ``prefill_mode`` selects the admission state machine
     ("chunked" default, "batched" = the fused-tick single-dispatch entry);
     ``ep_mesh`` builds the engines over an expert-parallel serving mesh
-    (``(2, 2)`` = hierarchical two-hop all-to-all topology)."""
+    (``(2, 2)`` = hierarchical two-hop all-to-all topology); ``spec`` arms
+    draft-then-verify speculation with the self-draft oracle (drafter ==
+    target), registering the verify/propose/commit jit family."""
     import dataclasses
 
     cfg = get_config(arch)
@@ -114,6 +116,7 @@ def build_engines(arch: str, *, reduced: bool = True, slots: int = 4,
         cfg, params, slots=slots, capacity=capacity,
         paged=True, page_size=page_size, prefix_sharing=True,
         prefill_mode=prefill_mode,
+        spec_draft=(cfg, params) if spec else None,
     )
     ec = static_ec if static_ec is not None else EngineConfig(
         max_batch=2, max_prefill=64, max_decode=8)
@@ -135,7 +138,9 @@ def analyze_contracts(tag: str, engine, report: Report, *,
         pred = predict_compiles(
             slots=engine.n_slots, capacity=engine.capacity,
             page_size=engine.page_size, prefill_chunk=engine.prefill_chunk,
-            workload=workload, prefill_mode=engine.prefill_mode)
+            workload=workload, prefill_mode=engine.prefill_mode,
+            spec=({"commit_pass": engine._spec_commit is not None}
+                  if getattr(engine, "drafter", None) is not None else None))
         sub.add("predicted-compiles", "info", tag,
                 f"workload {tuple(workload.prompt_lens)} x{workload.max_new} "
                 f"new over {workload.ticks} ticks compiles: "
@@ -215,9 +220,10 @@ def analyze_arch(arch: str, report: Report, *, reduced: bool = True,
                  passes: Sequence[str] = ("contract", "donation", "graph"),
                  moe_impl: Optional[str] = None,
                  prefill_mode: str = "chunked", tag: str = "",
-                 ep_mesh: Sequence[int] = ()) -> None:
+                 ep_mesh: Sequence[int] = (), spec: bool = False) -> None:
     cont, stat = build_engines(arch, reduced=reduced, moe_impl=moe_impl,
-                               prefill_mode=prefill_mode, ep_mesh=ep_mesh)
+                               prefill_mode=prefill_mode, ep_mesh=ep_mesh,
+                               spec=spec)
     base = f"{arch}{tag}"
     for tag, eng in ((f"{base}.continuous", cont), (f"{base}.static", stat)):
         if "contract" in passes:
@@ -237,8 +243,10 @@ def donated_call_sites() -> dict:
             "_decode": 4, "_prefill": 4, "_prefill_chunk_first": 4,
             "_prefill_chunk_cont": 4, "_prefill_chunk_batched": 6,
             "_reset_pages": 0, "_copy_page": 0, "_copy_slot": 0,
+            "_verify": 4, "_spec_commit": 6, "_spec_reset_tail": 0,
         },
         "serving/engine.py": {"_decode": 3, "_prefill": 2},
+        "serving/spec.py": {"_prefill": 4, "_propose": 5},
     }
 
 
@@ -304,6 +312,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--no-fused", action="store_true",
                     help="skip the grouped-MoE + batched-prefill fused-tick "
                          "engine target")
+    ap.add_argument("--no-spec", action="store_true",
+                    help="skip the speculative-decoding (self-draft) engine "
+                         "target")
     ap.add_argument("--no-ep", action="store_true",
                     help="skip the expert-parallel serving-mesh engine targets")
     ap.add_argument("--ep-only", action="store_true",
@@ -330,6 +341,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                 analyze_arch("nlg-350m-moe128", report, reduced=not args.full,
                              passes=engine_passes, moe_impl="grouped",
                              prefill_mode="batched", tag="+fused")
+            if not args.no_spec:
+                # speculative decoding with the self-draft oracle; gemma3's
+                # window-ring mix also registers the committed-recurrent-state
+                # pass (spec_commit), the widest spec jit family
+                analyze_arch("gemma3-27b", report, reduced=not args.full,
+                             passes=engine_passes, prefill_mode="batched",
+                             tag="+spec", spec=True)
     ep_rc = 0
     if engine_passes and not args.no_ep:
         if jax.device_count() >= _EP_DEVICES:

@@ -119,6 +119,16 @@ def main() -> None:
                     help="parallel samples per prompt (paged continuous "
                          "engine); with --prefix-sharing the samples share "
                          "ALL prompt pages and diverge via copy-on-write")
+    ap.add_argument("--spec-draft", default=None, metavar="ARCH",
+                    help="draft-then-verify speculative decoding "
+                         "(serving/spec.py): registry arch name of the dense "
+                         "drafter (randomly initialised, --reduced applies), "
+                         "or 'self' for the drafter==target oracle.  The "
+                         "drafter proposes --spec-k tokens per slot; the "
+                         "target verifies all windows in one batched pass "
+                         "over CoW page forks.  Greedy-only; needs --paged")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="with --spec-draft: drafted tokens per verify window")
     ap.add_argument("--ep-devices", default=None, metavar="N[xM]",
                     help="expert-parallel serving mesh: '8' shards experts "
                          "flat over 8 devices, '4x2' builds a (hosts, "
@@ -147,6 +157,19 @@ def main() -> None:
     if args.temperature <= 0.0 and (args.top_k or args.top_p):
         ap.error("--top-k/--top-p have no effect at --temperature 0 (greedy); "
                  "pass --temperature > 0")
+    if args.spec_draft:
+        if not args.paged:
+            ap.error("--spec-draft rides the paged continuous engine "
+                     "(CoW page forks); pass --paged")
+        if args.temperature > 0.0:
+            ap.error("--spec-draft is greedy-only: verification accepts the "
+                     "longest draft prefix matching the target's argmax, "
+                     "which is exact only at --temperature 0")
+        if args.ep_devices:
+            ap.error("--spec-draft is not implemented over an "
+                     "expert-parallel serving mesh; drop --ep-devices")
+        if args.spec_k < 1:
+            ap.error(f"--spec-k must be >= 1, got {args.spec_k}")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -281,12 +304,32 @@ def main() -> None:
                              prefill_chunk=ec.prefill_chunk)
         slots = args.slots or args.batch
         capacity = args.prompt_len + args.new_tokens
+        spec_draft = None
+        if args.spec_draft:
+            if args.spec_draft == "self":
+                dcfg, dparams = cfg, params
+            else:
+                dcfg = get_config(args.spec_draft)
+                if args.reduced:
+                    dcfg = make_reduced(dcfg)
+                if dcfg.vocab_size != cfg.vocab_size:
+                    ap.error(f"--spec-draft {args.spec_draft}: drafter vocab "
+                             f"{dcfg.vocab_size} != target vocab "
+                             f"{cfg.vocab_size} — greedy verification needs a "
+                             "shared token space")
+                dparams = init_params(dcfg, jax.random.PRNGKey(1))
+            spec_draft = (dcfg, dparams)
         ceng = ContinuousEngine(
             cfg, params, slots=slots, capacity=capacity,
             temperature=ec.temperature, top_k=ec.top_k, top_p=ec.top_p,
             kv_cache_bits=ec.kv_cache_bits, paged_cfg=pcfg, obs=obs,
             prefill_mode=args.prefill_mode,
+            spec_draft=spec_draft, spec_k=args.spec_k,
         )
+        if spec_draft is not None:
+            print(f"speculative decoding: drafter={spec_draft[0].name}"
+                  f"{' (self)' if args.spec_draft == 'self' else ''}, "
+                  f"k={args.spec_k} drafted tokens per verify window")
         contig_b = kv_cache_bytes(jax.eval_shape(
             lambda: init_caches(cfg, slots, capacity, kv_bits=args.kv_bits)))
         paged_b = kv_cache_bytes(jax.eval_shape(
@@ -323,6 +366,16 @@ def main() -> None:
         print(f"served {len(ids)} requests, {n_tok} tokens in {dt:.2f}s "
               f"({n_tok/dt:.1f} tok/s, arch={cfg.name}, paged, "
               f"prefill_mode={ceng.prefill_mode})")
+        if ceng.drafter is not None:
+            sp = [m["spec"] for m in ceng.metrics_log if "spec" in m]
+            drafted = sum(s["drafted"] for s in sp)
+            accepted = sum(s["accepted"] for s in sp)
+            windows = sum(s["windows"] for s in sp)
+            emitted = sum(s["emitted"] for s in sp)
+            print(f"speculation: {emitted} tokens / {windows} verify passes "
+                  f"= {emitted/max(windows,1):.2f} tok/verify "
+                  f"(accept rate {accepted/max(drafted,1):.2f}, "
+                  f"k={ceng.spec_k})")
         # everything below — preemptions, page occupancy, prefix-sharing
         # hits/CoW, chunked-prefill split, SLO percentiles — renders from
         # the ONE snapshot that --metrics-out also writes

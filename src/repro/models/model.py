@@ -647,6 +647,103 @@ def paged_prefill_chunk_batched(
     return logits, merged
 
 
+def paged_verify_chunk_batched(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # [S, C] int32 — cur token + k drafted tokens per slot
+    positions: jax.Array,  # [S, C] int32 — absolute positions, -1 at padding
+    active: jax.Array,  # [S] bool — row has a speculation window this tick
+    caches: dict,  # from init_paged_caches
+    block_tables: jax.Array,  # [S, max_pages] int32 — tail entries point at CoW forks
+    *,
+    capacity: int,
+    kv_bits: int = 0,
+    page_size: int,
+    memory: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """Speculative VERIFY: score all k + 1 window positions of every
+    decoding slot in one batched pass — ``paged_prefill_chunk_batched``
+    specialised for draft-then-verify:
+
+      * logits are returned for EVERY chunk position (not just the last):
+        position j's logits are the target model's distribution over the
+        token at ``positions[:, j] + 1``, which is what accepts/rejects the
+        drafted token at that position;
+      * there is no ``reset`` — every verified slot is long past admission;
+      * per-slot leaves (window rings, SSM/LRU states, conv prefixes) are
+        returned UNCHANGED: verify is a read that must not advance recurrent
+        state, because a rejection would have no way to roll it back.  Only
+        pool pages are written — and the scheduler points the window's table
+        entries at CoW fork pages precisely so that rejected writes can be
+        rolled back by dropping pages (accepted ones commit by refcount
+        handoff).  Non-fully-paged archs re-run the ACCEPTED tokens through
+        a separate committed chunk pass to advance their recurrent leaves;
+        its pool writes are inert (the `already`-stored guard in
+        models/attention.py trash-routes rewrites of a stored position).
+
+    Rows' windows may have different lengths (k is clamped near the budget
+    end): a valid prefix followed by -1 position padding, inert exactly as
+    in the batched prefill chunk.  Inactive rows carry all--1 tables.
+
+    Returns (logits at every window position [S, C, V], updated caches).
+    """
+    x = embed_tokens(cfg, params, tokens)
+
+    x, updated, _ = _run_segments(
+        cfg, params, x, positions, caches, "prefill_chunk_batched", memory,
+        False, block_table=block_tables,
+    )
+    logits = logits_out(cfg, params, x)  # [S, C, V]
+
+    merged = {}
+    for sk, pk, ls, paged in _layer_entries(cfg):
+        c_new, c_old = updated[sk][pk], caches[sk][pk]
+        o = {}
+        for key in c_new:
+            if key == "self" and paged:
+                o[key] = c_new[key]  # pool — fork-page writes, trash-routed when inactive
+            else:
+                o[key] = c_old[key]  # recurrent state must survive rejection
+        merged.setdefault(sk, {})[pk] = o
+    return logits, merged
+
+
+def paged_reset_page_tails(
+    cfg: ModelConfig,
+    caches: dict,
+    pages: jax.Array,  # [S] int32 — last committed page per slot, -1 = no-op row
+    start_offs: jax.Array,  # [S] int32 — first in-page offset to invalidate
+) -> dict:
+    """Invalidate the TAIL of each slot's last committed page: offsets
+    >= ``start_offs[i]`` of page ``pages[i]`` get ``pos = -1`` in every
+    layer's pool.
+
+    Required for speculative-decoding correctness, not hygiene: a committed
+    window page still carries the verify pass's writes BEYOND the accepted
+    point (rejected draft positions).  Those entries would satisfy the
+    `already`-stored write guard (models/attention.py) when the NEXT verify
+    round writes the same positions for real, silently trash-routing the
+    real K/V.  Invalidating the tail restores the invariant the guard
+    depends on: a live page never stores a position >= its slot's current
+    length.  One fixed-shape call per commit tick covers every slot
+    (``pages[i] = -1`` rows match nothing; ``start_offs[i] = page_size`` is
+    a row-level no-op)."""
+    out = {}
+    for sk, pk, ls, paged in _layer_entries(cfg):
+        c = dict(caches[sk][pk])
+        if paged:
+            self_c = dict(c["self"])
+            pos = self_c["pos"]  # [repeats, n_pages + 1, page_size]
+            n_pages, ps = pos.shape[1], pos.shape[2]
+            hit = jnp.arange(n_pages)[None, :] == pages[:, None]  # [S, P]
+            offm = jnp.arange(ps)[None, :] >= start_offs[:, None]  # [S, ps]
+            mask = (hit[:, :, None] & offm[:, None, :]).any(axis=0)  # [P, ps]
+            self_c["pos"] = jnp.where(mask[None], -1, pos)
+            c["self"] = self_c
+        out.setdefault(sk, {})[pk] = c
+    return out
+
+
 def paged_prefill_into_slot(
     cfg: ModelConfig,
     params: dict,

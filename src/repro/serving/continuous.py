@@ -96,7 +96,9 @@ from repro.models.model import (
     paged_prefill_chunk_batched,
     paged_prefill_into_slot,
     paged_ragged_decode_step,
+    paged_reset_page_tails,
     paged_reset_pages,
+    paged_verify_chunk_batched,
     prefill_into_slot,
     ragged_decode_step,
 )
@@ -105,6 +107,7 @@ from repro.serving.engine import Request, Response
 from repro.serving.kv_pool import BlockTables, KVBlockPool
 from repro.serving.prefix_index import PrefixIndex
 from repro.serving.sampling import sample
+from repro.serving.spec import Drafter, accept_length
 
 
 @dataclass
@@ -151,6 +154,13 @@ class SlotState:
     prefill_ctx: List[int] = field(default_factory=list)
     prefill_done: int = 0
     prefill_started: bool = False
+    # Tokens by cache position: ``seq[j]`` is the token whose K/V lives (or,
+    # for ``j == pos``, will live) at position ``j`` — context followed by
+    # generated tokens.  Maintained from prefill completion on, with
+    # ``len(seq) == pos + 1`` and ``seq[pos] == generated[-1]`` (the sampled
+    # but not-yet-written current token).  Speculative decoding force-feeds
+    # the drafter from it and rebuilds the drafter's cache on resync.
+    seq: List[int] = field(default_factory=list)
 
 
 @dataclass
@@ -203,7 +213,8 @@ class ContinuousEngine:
                  n_pages: Optional[int] = None, prefix_sharing: bool = False,
                  prefill_chunk: int = 0, prefill_mode: str = "chunked",
                  paged_cfg: Optional[PagedKVConfig] = None,
-                 obs: Optional[Obs] = None):
+                 obs: Optional[Obs] = None,
+                 spec_draft: Optional[tuple] = None, spec_k: int = 4):
         if paged_cfg is not None:
             # bundled form of the same knobs (configs.base.PagedKVConfig);
             # mixing it with the loose kwargs would silently shadow them
@@ -229,6 +240,28 @@ class ContinuousEngine:
                 "prefill_mode='batched' requires paged=True: the batched chunk "
                 "prefill writes directly into pool pages through block tables"
             )
+        if spec_draft is not None:
+            # draft-then-verify speculative decoding (serving/spec.py):
+            # spec_draft = (drafter ModelConfig, drafter params)
+            if not paged:
+                raise ValueError(
+                    "speculative decoding requires paged=True: rollback is "
+                    "implemented as dropping CoW page forks"
+                )
+            if temperature > 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: verification accepts "
+                    "the longest argmax-agreeing draft prefix, which is exact "
+                    "for temperature=0 and has no sampling analogue here"
+                )
+            if spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            if spec_draft[0].vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"drafter vocab_size {spec_draft[0].vocab_size} != target "
+                    f"vocab_size {cfg.vocab_size}: drafted token ids must BE "
+                    "target token ids for verification to compare them"
+                )
         from repro.quant import prepare_params_for_serving
         from repro.serving.ep import MeshCall, init_engine_mesh, place_params
 
@@ -237,6 +270,14 @@ class ContinuousEngine:
         # shard_map serving schedule (serving/ep.py, core/moe_serve.py).
         self._mesh, self._mesh_rules, cfg = init_engine_mesh(cfg)
         self.cfg = cfg
+        if spec_draft is not None and self._mesh is not None:
+            raise NotImplementedError(
+                "speculative decoding is not implemented over an "
+                "expert-parallel serving mesh: the verify window's CoW fork "
+                "plan is host-side per slot while the mesh replicates the page "
+                "pool per rank — run without cfg.ep_mesh / --ep-devices, or "
+                "drop --spec-draft"
+            )
 
         if self._mesh is not None:
             from repro.parallel.sharding import use_mesh
@@ -384,6 +425,36 @@ class ContinuousEngine:
         self._req_obs: Dict[int, dict] = {}
         routing = self.obs.routing
 
+        # -- speculative decoding: drafter + verify plumbing ----------------
+        self.spec_k = int(spec_k) if spec_draft is not None else 0
+        self.drafter: Optional[Drafter] = None
+        self._spec_commit = None
+        self._spec_tick_m: dict = {}
+        if spec_draft is not None:
+            if routing:
+                raise ValueError(
+                    "routing collection is incompatible with speculative "
+                    "decoding: the verify pass replaces the plain decode step "
+                    "and does not return RoutingStats"
+                )
+            dcfg, dparams = spec_draft
+            self.drafter = Drafter(
+                dcfg, prepare_params_for_serving(dcfg, dparams),
+                slots=slots, capacity=capacity, spec_k=self.spec_k,
+            )
+            self._h_accept = M.histogram(
+                "spec.accept_rate", unit="", lo=1.0 / (4 * self.spec_k),
+                hi=1.0 + 1e-9, n_buckets=16)
+            self._h_tok_verify = M.histogram(
+                "spec.tokens_per_verify", unit="tok", lo=1.0,
+                hi=float(self.spec_k + 1) + 1e-9, n_buckets=16)
+            self._c_spec_drafted = M.counter("spec.draft_tokens", unit="tok")
+            self._c_spec_accepted = M.counter("spec.accepted_tokens", unit="tok")
+            self._c_spec_verifies = M.counter("spec.verify_windows")
+            self._c_spec_commit_pages = M.counter("spec.committed_pages", unit="page")
+            self._c_spec_rollback_pages = M.counter("spec.rolled_back_pages", unit="page")
+            self._c_spec_resyncs = M.counter("spec.draft_resyncs")
+
         if paged:
             def _step(params, tokens, positions, active, caches, tables):
                 # normalized 3-tuple return (routing = () when collection is
@@ -454,6 +525,42 @@ class ContinuousEngine:
                 lambda caches, src, dst: paged_copy_slot_leaves(cfg, caches, src, dst),
                 donate_argnums=(0,),
             )
+            if self.drafter is not None:
+                def _verify_fn(params, tokens, positions, active, caches, tables):
+                    logits, caches = paged_verify_chunk_batched(
+                        cfg, params, tokens, positions, active, caches, tables,
+                        capacity=capacity, kv_bits=kv_cache_bits,
+                        page_size=page_size,
+                    )
+                    # greedy-only engine: argmax inside the jit (identical to
+                    # sample() at temperature 0) keeps the per-tick host sync
+                    # to [slots, k + 1] int32 instead of full logits
+                    return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+                self._verify = jax.jit(_verify_fn, donate_argnums=(4,))
+                self._spec_reset_tail = jax.jit(
+                    lambda caches, pages, offs: paged_reset_page_tails(
+                        cfg, caches, pages, offs),
+                    donate_argnums=(0,),
+                )
+                if not arch_fully_paged(cfg):
+                    # recurrent per-slot state (window rings, SSM/LRU, conv
+                    # prefixes) cannot be rolled back, so verify leaves it
+                    # untouched; this separate pass advances it over the
+                    # ACCEPTED tokens only, after the page handoff.  Its pool
+                    # writes are inert: every accepted position is already
+                    # stored in a committed page, so the `already` write guard
+                    # trash-routes the rewrite.
+                    def _spec_commit_fn(params, tokens, positions, reset,
+                                        active, last_idx, caches, tables):
+                        return paged_prefill_chunk_batched(
+                            cfg, params, tokens, positions, reset, active,
+                            last_idx, caches, tables, capacity=capacity,
+                            kv_bits=kv_cache_bits, page_size=page_size,
+                        )
+
+                    self._spec_commit = jax.jit(
+                        _spec_commit_fn, donate_argnums=(6,))
         else:
             def _step(params, tokens, positions, active, caches):
                 out = ragged_decode_step(cfg, params, tokens, positions, active, caches,
@@ -498,6 +605,19 @@ class ContinuousEngine:
                 "copy_page": (self._copy_page, (0,), False),
                 "copy_slot": (self._copy_slot, (0,), False),
             })
+            if self.drafter is not None:
+                # fixed [slots, k + 1] / [k + 1, slots] shapes: the whole
+                # speculative tick is primary never-retrace machinery except
+                # the drafter's lazy per-context-length prefill
+                self._jit_registry.update({
+                    "verify": (self._verify, (4,), True),
+                    "spec_reset_tail": (self._spec_reset_tail, (0,), True),
+                    "draft_propose": (self.drafter._propose, (5,), True),
+                    "draft_prefill": (self.drafter._prefill, (4,), False),
+                })
+                if self._spec_commit is not None:
+                    self._jit_registry["spec_commit"] = (
+                        self._spec_commit, (6,), True)
         if self._mesh is not None:
             # every entry point (execution, lower, eval_shape) runs under the
             # serving mesh; attribute forwarding keeps the watchdog's
@@ -586,6 +706,36 @@ class ContinuousEngine:
                 [()], [()]))
             for nm in ("copy_page", "copy_slot"):
                 out.append(entry(nm, lambda: (caches, i32(), i32()), [()], [()]))
+            if self.drafter is not None:
+                K1 = self.spec_k + 1
+                dparams = jax.tree.map(aval, self.drafter.params)
+                dcaches = jax.tree.map(aval, self.drafter.caches)
+                out.append(entry(
+                    "verify",
+                    lambda: (params, i32(S, K1), i32(S, K1), boolv(S), caches,
+                             i32(S, MP)),
+                    [()], [()]))
+                out.append(entry(
+                    "spec_reset_tail",
+                    lambda: (caches, i32(S), i32(S)),
+                    [()], [()]))
+                if "spec_commit" in self._jit_registry:
+                    out.append(entry(
+                        "spec_commit",
+                        lambda: (params, i32(S, K1), i32(S, K1), boolv(S),
+                                 boolv(S), i32(S), caches, i32(S, MP)),
+                        [()], [()]))
+                out.append(entry(
+                    "draft_propose",
+                    lambda: (dparams, i32(K1, S), boolv(K1, S), i32(K1, S),
+                             boolv(K1, S), dcaches),
+                    [()], [()]))
+                # lazy drafter (re)prefill: one [1, n] signature per distinct
+                # committed-sequence length, same family as admission prefill
+                out.append(entry(
+                    "draft_prefill",
+                    lambda n: (dparams, i32(1, n), i32(1, n), i32(), dcaches),
+                    [(n,) for n in ctx_lens], [(n,) for n in ctx_sample]))
         else:
             out.append(entry(
                 "decode",
@@ -771,6 +921,7 @@ class ContinuousEngine:
             budget=item.budget, active=True, admit_seq=self._admit_counter,
             prompt_len=item.prompt_len, prompt=item.prompt,
             prefill_logits=base.prefill_logits,
+            seq=base.seq[:-1] + [first],
         )
         self._admit_counter += 1
         self._cur_token[i] = first
@@ -886,6 +1037,7 @@ class ContinuousEngine:
                 budget=item.budget, active=True, admit_seq=self._admit_counter,
                 prompt_len=item.prompt_len, prompt=item.prompt,
                 prefill_logits=stash,
+                seq=list(ctx) + [first],
             )
             self._admit_counter += 1
             self._cur_token[i] = first
@@ -971,6 +1123,7 @@ class ContinuousEngine:
                 slot.prefilling = False
                 slot.prefill_ctx = []
                 slot.generated = slot.generated + [first]
+                slot.seq = list(ctx) + [first]
                 # analysis: allow(host-asarray) — already synced by the cast above; stashed for fork admission
                 slot.prefill_logits = np.asarray(logits) if self.prefix is not None else None
                 self._cur_token[i] = first
@@ -1080,6 +1233,7 @@ class ContinuousEngine:
                 slot.prefilling = False
                 slot.prefill_ctx = []
                 slot.generated = slot.generated + [first]
+                slot.seq = list(ctx) + [first]
                 slot.prefill_logits = row.copy() if self.prefix is not None else None
                 self._cur_token[i] = first
                 self._obs_first_token(slot.request_id)
@@ -1106,6 +1260,10 @@ class ContinuousEngine:
             # stay live, mapped, and (if full) indexed for future sharing
             freed = self.pool.release(i)
             self.tables.reset(i)
+            if self.drafter is not None:
+                # lazy re-prefill covers the next occupant (or this request's
+                # re-admission after preemption) at its first speculative tick
+                self.drafter.invalidate(i)
             if freed:
                 if self.prefix is not None:
                     self.prefix.evict_pages(freed)
@@ -1218,6 +1376,286 @@ class ContinuousEngine:
                     self._tr.instant(("engine", 0), "cow_copy",
                                      args={"slot": i, "src": page, "dst": new})
 
+    # -- speculative decoding (serving/spec.py holds the drafter) --------
+    def _spec_plan_pages(self, decoding) -> Dict[int, dict]:
+        """Per-slot speculation plan: window size ``k`` and the page run the
+        verify pass writes.  The window covers positions ``p .. p + k`` (the
+        unwritten current token plus ``k`` drafted ones), i.e. table entries
+        ``e0 = p // ps`` through ``e1 = (p + k) // ps``:
+
+          * the BOUNDARY entry ``e0`` (only when ``p`` is mid-page) is the
+            partially-filled tail page.  If it is shared (refcount > 1) the
+            plan forks it — fresh page + device copy — and the verify table
+            points at the fork, so the shared base is never written (commit
+            = refcount handoff, ``KVBlockPool.commit_fork_run``).  A private
+            (refcount 1) boundary is written in place: the boundary entry
+            ALWAYS commits (at least one token is emitted per window), so
+            in-place writes are never rolled back — stale tail entries past
+            the accepted point are handled by ``_spec_reset_tail``;
+          * entries beyond ``e0`` are fresh pages, allocated all-or-nothing
+            with the same preempt-youngest discipline as ``_ensure_pages``
+            (which spec mode replaces: the plan subsumes lazy growth + CoW).
+            On commit, entries up to the last accepted position's page join
+            the block table; the rest roll back via ``drop_fork_run``.
+
+        A dry pool preempts the youngest active slot — possibly one already
+        planned (its plan is discarded below; ``_release_slot`` already freed
+        its window pages) or the slot being planned (skipped)."""
+        ps = self.page_size
+        order = sorted((i for i in range(self.n_slots) if decoding[i]),
+                       key=lambda i: self.slots[i].admit_seq)
+        plans: Dict[int, dict] = {}
+        for i in order:
+            slot = self.slots[i]
+            if not slot.active or slot.prefilling:
+                continue  # preempted by an earlier plan's allocation
+            p = slot.pos
+            remaining = slot.budget - len(slot.generated)
+            k = max(0, min(self.spec_k, remaining - 1, self.capacity - 1 - p))
+            e0, e1 = p // ps, (p + k) // ps
+            while True:
+                slot = self.slots[i]
+                if not slot.active or slot.prefilling:
+                    break  # this slot itself was preempted; no plan
+                boundary = int(self.tables.row(i)[e0]) if p % ps else -1
+                fork_boundary = boundary >= 0 and self.pool.refcount(boundary) > 1
+                need = (e1 - e0) + (0 if p % ps else 1) + (1 if fork_boundary else 0)
+                got = self.pool.alloc(need, owner=i)
+                if got is not None:
+                    window: Dict[int, int] = {}
+                    fork = -1
+                    if fork_boundary:
+                        fork = got.pop()
+                        self._jit_calls_tick += 1
+                        self.caches = self._copy_page(
+                            self.caches, jnp.asarray(boundary, jnp.int32),
+                            jnp.asarray(fork, jnp.int32))
+                        self.cow_copies += 1
+                        self._c_cow.inc()
+                        window[e0] = fork
+                    elif boundary >= 0:
+                        window[e0] = boundary  # private: write in place
+                    for e, pg in zip((e for e in range(e0, e1 + 1)
+                                      if e not in window), got):
+                        window[e] = pg
+                    plans[i] = dict(
+                        rid=slot.request_id, k=k, p=p, e0=e0, e1=e1,
+                        window=window,
+                        boundary_base=boundary if fork_boundary else -1,
+                        boundary_fork=fork,
+                    )
+                    break
+                victim = self._youngest_active()
+                self._preempt(victim)
+                if victim == i:
+                    break
+        # drop plans whose slot was preempted by a later allocation — its
+        # window pages were freed (and device-reset) by _release_slot
+        return {i: pl for i, pl in plans.items()
+                if self.slots[i].active and not self.slots[i].prefilling
+                and self.slots[i].request_id == pl["rid"]}
+
+    def _spec_decode_tick(self, decoding) -> int:
+        """One speculative decode tick: draft ``k`` tokens per decoding slot,
+        verify every slot's ``k + 1`` window positions in ONE batched target
+        pass over CoW-forked tail pages, commit the longest argmax-agreeing
+        prefix (plus the target's own token at the first disagreement) by
+        refcount handoff, and roll back the rejected suffix by dropping fork
+        pages.  Token-exact vs the non-speculative greedy engine by
+        construction (tests/test_spec.py).  Returns #tokens emitted.
+
+        Ordering within the tick (each phase one jitted call at most):
+        plan (may preempt) -> drafter sync/propose -> verify -> host
+        accept/commit bookkeeping (pages, tables, slot state) -> committed
+        recurrent-state pass (non-fully-paged archs) -> batched page-tail
+        invalidation + rollback page resets -> completions (which may cascade
+        admissions; they must run AFTER the commit pass or a fresh occupant's
+        first chunk could be clobbered)."""
+        plans = self._spec_plan_pages(decoding)
+        if not plans:
+            return 0
+        ps = self.page_size
+        S, C = self.n_slots, self.spec_k + 1
+
+        # --- draft: lazily (re)sync the drafter, then ONE propose scan
+        if self._tr:
+            self._tr.begin(("engine", 0), "spec_draft")
+        need_draft = []
+        for i, pl in plans.items():
+            slot = self.slots[i]
+            if pl["k"] == 0:
+                continue  # window is just the current token; nothing to draft
+            if self.drafter.needs_sync(i, slot.pos):
+                if self.drafter.next_pos[i] >= 0:
+                    self._c_spec_resyncs.inc()
+                    self._spec_tick_m["resyncs"] = \
+                        self._spec_tick_m.get("resyncs", 0) + 1
+                self._jit_calls_tick += 1
+                self.drafter.sync(i, slot.seq, slot.pos)
+            forced = slot.seq[int(self.drafter.next_pos[i]):slot.pos + 1]
+            need_draft.append((i, forced, pl["k"]))
+        if need_draft:
+            self._jit_calls_tick += 1
+            proposals = self.drafter.propose(need_draft)
+        else:
+            proposals = {}
+        for i, pl in plans.items():
+            pl["proposal"] = proposals.get(i, [])
+        if self._tr:
+            self._tr.end(("engine", 0))
+
+        # --- verify: all windows, one batched pass over the fork tables
+        if self._tr:
+            self._tr.begin(("engine", 0), "spec_verify")
+        tokens = np.zeros((S, C), np.int32)
+        positions = np.full((S, C), -1, np.int32)
+        active = np.zeros((S,), bool)
+        tbl = np.full((S, self.max_pages), -1, np.int32)
+        for i, pl in plans.items():
+            k, p = pl["k"], pl["p"]
+            tokens[i, 0] = self._cur_token[i]
+            tokens[i, 1:1 + k] = pl["proposal"]
+            positions[i, :k + 1] = np.arange(p, p + k + 1, dtype=np.int32)
+            active[i] = True
+            row = np.array(self.tables.row(i))
+            for e, pg in pl["window"].items():
+                row[e] = pg
+            tbl[i] = row
+        self._jit_calls_tick += 1
+        greedy_dev, self.caches = self._verify(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(active), self.caches, jnp.asarray(tbl),
+        )
+        # analysis: allow(host-asarray) — THE per-tick sync: the target's greedy tokens drive accept/commit/rollback decisions on the host
+        greedy = np.asarray(greedy_dev)
+        if self._tr:
+            self._tr.end(("engine", 0))
+
+        # --- accept + commit/rollback bookkeeping (host side, in admission
+        # order; greedy[i, j] is the target's token for position p + j + 1)
+        if self._tr:
+            self._tr.begin(("engine", 0), "spec_commit")
+        tail_pages = np.full((S,), -1, np.int32)
+        tail_offs = np.zeros((S,), np.int32)
+        reset_mask = np.zeros((self.n_pages + 1,), bool)
+        any_reset = False
+        commit_rows = []
+        emitted_total = accepted_total = drafted_total = 0
+        t_tok = time.perf_counter()
+        for i, pl in plans.items():
+            slot = self.slots[i]
+            k, p = pl["k"], pl["p"]
+            a = accept_length(pl["proposal"], greedy[i])
+            # accepted drafts, then the target's own token at the first
+            # disagreement (or the bonus token after a full accept)
+            appended = [int(t) for t in pl["proposal"][:a]] + [int(greedy[i, a])]
+            if self.eos_id >= 0 and self.eos_id in appended:
+                appended = appended[:appended.index(self.eos_id) + 1]
+            n = len(appended)  # 1 <= n <= k + 1 <= remaining budget
+            # pages: entries up to eb = page of the last ACCEPTED position
+            # commit; later window entries roll back.  n >= 1 makes eb >= e0
+            # always — the boundary entry commits on every outcome.
+            eb = (p + n - 1) // ps
+            if pl["boundary_fork"] >= 0:
+                freed = self.pool.commit_fork_run([pl["boundary_base"]], i)
+                self.tables.set_entry(i, pl["e0"], pl["boundary_fork"])
+                if freed:  # a sharer departed mid-tick and left us the base
+                    if self.prefix is not None:
+                        self.prefix.evict_pages(freed)
+                    reset_mask[freed] = True
+                    any_reset = True
+            grow = [pl["window"][e]
+                    for e in range(self.tables.n_mapped(i), eb + 1)]
+            if grow:
+                self.tables.append(i, grow)
+            rollback = [pl["window"][e] for e in range(eb + 1, pl["e1"] + 1)]
+            if rollback:
+                freed = self.pool.drop_fork_run(rollback, i)
+                reset_mask[freed] = True
+                any_reset = True
+                self._c_spec_rollback_pages.inc(len(freed))
+            self._c_spec_commit_pages.inc(len(grow))
+            # position p + n - 1 is the last VALID write in page eb; verify
+            # writes beyond it (rejected drafts) are invalidated in one
+            # batched pass below, restoring the `already`-guard invariant
+            tail_pages[i] = int(self.tables.row(i)[eb])
+            tail_offs[i] = (p + n - 1) % ps + 1
+            # slot state: appended[-1] is the new sampled-but-unwritten token
+            slot.pos = p + n
+            slot.generated.extend(appended)
+            slot.seq.extend(appended)
+            slot.prefill_logits = None
+            self._cur_token[i] = appended[-1]
+            if self.drafter.after_commit(i, p, k, a == k, slot.pos):
+                self._c_spec_resyncs.inc()
+                self._spec_tick_m["resyncs"] = \
+                    self._spec_tick_m.get("resyncs", 0) + 1
+            emitted_total += n
+            accepted_total += a
+            drafted_total += k
+            self._c_spec_verifies.inc()
+            self._c_spec_drafted.inc(k)
+            self._c_spec_accepted.inc(a)
+            if k:
+                self._h_accept.observe(a / k)
+            self._h_tok_verify.observe(float(n))
+            if self._tr:
+                self._tr.instant(("request", slot.request_id), "spec_commit",
+                                 ts=t_tok, args={"drafted": k, "accepted": a,
+                                                 "emitted": n})
+            commit_rows.append((i, pl, appended))
+
+        # --- committed recurrent-state pass (window rings / SSM / LRU /
+        # conv): re-run the accepted tokens through the batched chunk entry
+        # so per-slot leaves advance; pool writes are `already`-trash-routed
+        if self._spec_commit is not None:
+            tokens2 = np.zeros((S, C), np.int32)
+            positions2 = np.full((S, C), -1, np.int32)
+            active2 = np.zeros((S,), bool)
+            last2 = np.zeros((S,), np.int32)
+            tbl2 = np.full((S, self.max_pages), -1, np.int32)
+            for i, pl, appended in commit_rows:
+                slot = self.slots[i]
+                n, p = len(appended), pl["p"]
+                tokens2[i, :n] = np.asarray(slot.seq[p:p + n], np.int32)
+                positions2[i, :n] = np.arange(p, p + n, dtype=np.int32)
+                active2[i] = True
+                last2[i] = n - 1
+                tbl2[i] = self.tables.row(i)
+            self._jit_calls_tick += 1
+            _, self.caches = self._spec_commit(
+                self.params, jnp.asarray(tokens2), jnp.asarray(positions2),
+                jnp.asarray(np.zeros((S,), bool)), jnp.asarray(active2),
+                jnp.asarray(last2), self.caches, jnp.asarray(tbl2),
+            )
+
+        # --- device-side invalidation: committed-page tails (always — one
+        # fixed-shape call per commit tick) and rollback-freed pages
+        self._jit_calls_tick += 1
+        self.caches = self._spec_reset_tail(
+            self.caches, jnp.asarray(tail_pages), jnp.asarray(tail_offs))
+        if any_reset:
+            self._jit_calls_tick += 1
+            self.caches = self._reset_pages(self.caches, jnp.asarray(reset_mask))
+        if self._tr:
+            self._tr.end(("engine", 0))
+
+        # --- completions last: _finish_if_done may release the slot and
+        # cascade an admission into it (whose first chunk must not be
+        # clobbered by the commit pass above).  Emitted tokens share one
+        # timestamp — bursty TPOT is the truth of speculative decoding.
+        for i, pl, appended in commit_rows:
+            slot = self.slots[i]
+            if slot.request_id != pl["rid"]:
+                continue  # released + re-admitted earlier in this loop
+            for _ in appended:
+                self._obs_token(slot.request_id, t_tok)
+            self._finish_if_done(i)
+        self._spec_tick_m.update(
+            windows=len(commit_rows), drafted=drafted_total,
+            accepted=accepted_total, emitted=emitted_total)
+        return emitted_total
+
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One engine tick: at most one chunk-budget of admission prefill
@@ -1251,7 +1689,9 @@ class ContinuousEngine:
                 self._prefill_tick_batched()
             else:
                 self._prefill_tick()
-        if self.paged:
+        if self.paged and self.drafter is None:
+            # spec mode skips this: _spec_plan_pages subsumes lazy growth and
+            # CoW for the whole k+1 window, fork-first instead of copy-first
             self._ensure_pages()
         # rows eligible to decode this tick — mid-prefill slots are excluded,
         # and their table rows are masked out of the decode step so its pool
@@ -1270,6 +1710,19 @@ class ContinuousEngine:
             if n_active or prefill_toks:
                 self._record_metrics(0, t_mid - t0, prefill_toks, n_active,
                                      prefill_s=t_mid - t0)
+            if self._tr:
+                self._tr.end(("engine", 0))
+            return n_active
+        if self.drafter is not None:
+            # speculative path: the whole draft/verify/commit tick replaces
+            # the one-token decode step below (same tick telemetry shape)
+            n_decoded = self._spec_decode_tick(decoding)
+            prefill_toks = self._end_tick_prefill()
+            # analysis: allow(block-sync) — tick boundary fence, same as the non-speculative tail below
+            jax.block_until_ready(self.caches)
+            t1 = time.perf_counter()
+            self._record_metrics(n_decoded, t1 - t0, prefill_toks, n_active,
+                                 prefill_s=t_mid - t0, decode_s=t1 - t_mid)
             if self._tr:
                 self._tr.end(("engine", 0))
             return n_active
@@ -1301,6 +1754,7 @@ class ContinuousEngine:
                 continue
             slot.pos += 1
             slot.generated.append(int(nxt[i]))
+            slot.seq.append(int(nxt[i]))
             # the stashed admission logits are only consumable by a fork
             # BEFORE the base's first decode tick — drop the dead copy
             slot.prefill_logits = None
@@ -1387,6 +1841,9 @@ class ContinuousEngine:
             if self.prefix is not None:
                 m["prefix_hits"] = self.prefix_hits
                 m["prefix_hit_tokens"] = self.prefix_hit_tokens
+        if self.drafter is not None and self._spec_tick_m:
+            m["spec"] = self._spec_tick_m
+            self._spec_tick_m = {}
         self.last_metrics = m
         self.metrics_log.append(m)
         if len(self.metrics_log) > self._metrics_cap:

@@ -47,6 +47,11 @@ class EngineConfig:
     n_pages: int = 0  # 0 = auto (slots * pages-per-capacity, no oversubscription)
     prefix_sharing: bool = False  # refcounted CoW page sharing (needs page_size > 0)
     prefill_chunk: int = 0  # admission-prefill tokens per tick (0 = auto: max(64, page_size))
+    # Draft-then-verify speculative decoding (serving/spec.py): registry arch
+    # name of the dense drafter, or "self" for the drafter==target oracle.
+    # Greedy-only; needs page_size > 0. "" = off.
+    spec_draft: str = ""
+    spec_k: int = 4  # drafted tokens per verify window
 
 
 @dataclass

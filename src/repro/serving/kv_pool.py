@@ -220,6 +220,43 @@ class KVBlockPool:
             self._holders[p] = set()
             self._free.append(p)
 
+    def commit_fork_run(self, bases, owner: int) -> List[int]:
+        """Commit a run of copy-on-write forks by REFCOUNT HANDOFF: for each
+        base page the speculative window forked, drop ``owner``'s reference
+        to the base — the fork page (already alloc'd to ``owner``) takes its
+        place in the block table, so the owner's page count is conserved.
+        Returns the bases actually freed (refcount hit zero: the base was
+        shared at fork time, so this is normally empty, but a sharer can
+        depart mid-speculation).  Callers must evict freed ids from the
+        prefix index and device-invalidate them before reuse."""
+        freed = []
+        for p in bases:
+            if self.drop(p, owner):
+                freed.append(p)
+        return freed
+
+    def drop_fork_run(self, forks, owner: int) -> List[int]:
+        """Roll back a rejected speculative suffix: free a run of fork pages
+        that were alloc'd for the verify window and whose contents were
+        rejected.  Every page must be a PRIVATE fork of ``owner`` (refcount
+        exactly 1) — a shared or foreign page here means the scheduler
+        committed it into a table or the prefix index, and freeing it would
+        corrupt another sequence.  Returns the freed pages (always all of
+        them); callers must device-invalidate them before reuse."""
+        for p in forks:
+            p = self._check_page(p)
+            if self._refs[p] != 1 or owner not in self._holders[p]:
+                raise ValueError(
+                    f"page {p} is not a private fork of owner {owner} "
+                    f"(refs={int(self._refs[p])}, "
+                    f"holders={sorted(self._holders[p])})"
+                )
+        out = []
+        for p in forks:
+            self.drop(p, owner)
+            out.append(p)
+        return out
+
     def release(self, owner: int) -> List[int]:
         """Drop every page reference ``owner`` holds (request completion or
         preemption) and return the pages actually FREED — i.e. those whose

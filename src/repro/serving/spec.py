@@ -1,0 +1,185 @@
+"""Draft-then-verify speculative decoding over CoW page forks.
+
+The paper's staged MoS distillation (training/distill.py, §4) exists to
+produce a cheap dense student of the MoE teacher; the paged KV pool's
+refcounted forks (PR 4) make KV rollback nearly free.  This module is the
+piece that turns those two halves into a decode-latency win:
+
+  * a small dense **drafter** proposes ``k`` greedy tokens per running slot
+    (one jitted ``lax.scan`` over the ragged decode step covers every slot);
+  * the target MoE model **verifies** all ``k + 1`` window positions of
+    every slot in ONE batched pass (``models.model.paged_verify_chunk_batched``,
+    the PR 8 batched-chunk machinery minus admission reset), writing the
+    window's K/V into **copy-on-write forks** of each slot's tail pages;
+  * the longest agreeing prefix **commits** — fork pages replace the bases
+    by refcount handoff (``KVBlockPool.commit_fork_run``) — and the rejected
+    suffix **rolls back** by dropping pages (``drop_fork_run``) without the
+    base pages ever being touched.
+
+Greedy verification is exact: position ``j`` of the verify logits is the
+target's argmax for the token at ``pos + j + 1``, so accepting the longest
+prefix where draft and target agree (plus the target's own token at the
+first disagreement) reproduces the non-speculative greedy stream token for
+token — the drafter's quality moves the ACCEPT RATE, never the output.
+``tests/test_spec.py`` pins this parity across arch mixes, int8 KV, prefix
+sharing, chunked/batched prefill, page-boundary windows and preemption.
+
+The engine-side state machine lives in ``ContinuousEngine._spec_decode_tick``
+(serving/continuous.py); this module owns the drafter: its own contiguous
+caches (it is a plain dense model — no pages needed at drafter scale), a
+lazily-synchronized per-slot validity watermark, and the propose scan.
+
+Drafter cache discipline — the subtle part.  ``next_pos[i]`` is the number
+of sequence tokens the drafter's caches have correctly consumed for slot
+``i`` (-1 = invalid).  Each propose step feeds the token at one position and
+writes that position's K/V, so after proposing ``k`` tokens from position
+``p`` the drafter has consumed positions ``p .. p + k - 1``.  On commit the
+watermark becomes ``min(p + k, p')`` (``p'`` = the slot's new position):
+
+  * **full accept** — every consumed token was correct; the drafter still
+    needs the bonus token, so the next propose force-feeds 2 tokens;
+  * **partial accept** — consumed tokens beyond the accept point were
+    wrong.  For attention-only drafters this is still exact: contiguous
+    attention masks by position and the next window's steps overwrite the
+    stale entries index-by-index before ever attending to them.  Recurrent
+    drafters (SSM/LRU/conv mixes) have irreversible state, so a partial
+    accept invalidates them and the next tick re-prefills the committed
+    sequence (``exact_partial`` below gates this; it only costs draft-side
+    FLOPs — parity is untouched either way).
+
+A slot release (completion or preemption) just invalidates the watermark;
+the drafter lazily re-prefills at the slot's next speculative tick, which
+uniformly covers first admission, fork admission, preemption re-admission
+and recurrent-drafter resync without touching any admission path.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import (
+    arch_fully_paged,
+    init_caches,
+    prefill_into_slot,
+    ragged_decode_step,
+)
+
+
+def accept_length(proposal: Sequence[int], greedy: Sequence[int]) -> int:
+    """Longest prefix of ``proposal`` the target's greedy tokens accept:
+    ``greedy[j]`` is the target's argmax for the position AFTER the window's
+    j-th input, i.e. exactly the token the draft proposed as
+    ``proposal[j]``."""
+    a = 0
+    while a < len(proposal) and int(proposal[a]) == int(greedy[a]):
+        a += 1
+    return a
+
+
+class Drafter:
+    """The draft model: contiguous caches over the engine's slot pool, a
+    per-slot validity watermark, and two jitted entry points (registered in
+    the engine's jit registry as ``draft_prefill`` / ``draft_propose``)."""
+
+    def __init__(self, cfg: ModelConfig, params: dict, *, slots: int,
+                 capacity: int, spec_k: int):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = int(slots)
+        self.capacity = int(capacity)
+        self.k = int(spec_k)
+        self.caches = init_caches(cfg, slots, capacity, kv_bits=0)
+        # sequence tokens correctly consumed per slot (-1 = cache invalid)
+        self.next_pos = np.full((slots,), -1, np.int64)
+        # attention-only drafters stay exact across partial accepts (stale
+        # entries are overwritten index-by-index before being attended to);
+        # recurrent mixes must resync — see module docstring
+        self.exact_partial = arch_fully_paged(cfg)
+
+        def _prefill_fn(params, tokens, positions, slot, caches):
+            return prefill_into_slot(cfg, params, tokens, positions, slot,
+                                     caches)
+
+        self._prefill = jax.jit(_prefill_fn, donate_argnums=(4,))
+
+        def _propose_fn(params, forced, use_forced, pos, act, caches):
+            # T = k + 1 steps of greedy self-feed; per-step force-feed
+            # resynchronizes each row onto the committed stream (1 forced
+            # token normally, 2 after a full accept — the bonus token)
+            def body(carry, xs):
+                cur, c = carry
+                f, uf, p, a = xs
+                inp = jnp.where(uf, f, cur)
+                logits, c = ragged_decode_step(cfg, params, inp[:, None], p,
+                                               a, c)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return (nxt, c), nxt
+
+            (_, caches), outs = jax.lax.scan(
+                body, (forced[0], caches), (forced, use_forced, pos, act))
+            return outs, caches
+
+        self._propose = jax.jit(_propose_fn, donate_argnums=(5,))
+
+    def invalidate(self, slot: int) -> None:
+        self.next_pos[slot] = -1
+
+    def needs_sync(self, slot: int, pos: int) -> bool:
+        """True when the slot's next propose cannot be reached by force-feeding
+        at most 2 tokens (fresh slot, post-preemption, recurrent resync)."""
+        return not (0 <= self.next_pos[slot] and
+                    pos + 1 - self.next_pos[slot] <= 2)
+
+    def sync(self, slot: int, seq: Sequence[int], pos: int) -> None:
+        """(Re)build the drafter's cache for ``slot``: one prefill of the
+        committed tokens below ``pos`` (the unwritten current token at
+        ``pos`` is force-fed by the next propose)."""
+        toks = jnp.asarray(np.asarray(seq[:pos], np.int32)[None])
+        ppos = jnp.arange(pos, dtype=jnp.int32)[None]
+        _, self.caches = self._prefill(self.params, toks, ppos,
+                                       jnp.asarray(slot, jnp.int32),
+                                       self.caches)
+        self.next_pos[slot] = pos
+
+    def propose(self, rows: Sequence[Tuple[int, List[int], int]]) -> Dict[int, List[int]]:
+        """One jitted scan proposes for every row: ``rows`` is
+        ``(slot, forced_tokens, k)`` where ``forced_tokens`` are the committed
+        tokens from the validity watermark through the slot's current token
+        (length 1 or 2 by the watermark invariant) and ``k >= 1`` is the
+        window size.  Returns slot -> k proposed tokens."""
+        T, S = self.k + 1, self.n_slots
+        forced = np.zeros((T, S), np.int32)
+        use_f = np.zeros((T, S), bool)
+        pos = np.zeros((T, S), np.int32)
+        act = np.zeros((T, S), bool)
+        for slot, ftoks, k in rows:
+            c = len(ftoks)
+            assert 1 <= c <= 2 and c - 1 + k <= T, (c, k, T)
+            base = int(self.next_pos[slot])
+            for t in range(c - 1 + k):
+                act[t, slot] = True
+                pos[t, slot] = min(base + t, self.capacity - 1)
+                if t < c:
+                    use_f[t, slot] = True
+                    forced[t, slot] = ftoks[t]
+        outs, self.caches = self._propose(
+            self.params, jnp.asarray(forced), jnp.asarray(use_f),
+            jnp.asarray(pos), jnp.asarray(act), self.caches)
+        # analysis: allow(host-asarray) — ONE sync serves every slot's proposal; the engine's accept bookkeeping is host-side by design
+        outs = np.asarray(outs)
+        return {slot: [int(x) for x in outs[len(ftoks) - 1:len(ftoks) - 1 + k, slot]]
+                for slot, ftoks, k in rows}
+
+    def after_commit(self, slot: int, p: int, k: int, accepted_all: bool,
+                     new_pos: int) -> bool:
+        """Advance the validity watermark after a commit; returns True when
+        the drafter was invalidated (recurrent resync needed)."""
+        if self.exact_partial or accepted_all:
+            self.next_pos[slot] = min(p + k, new_pos)
+            return False
+        self.invalidate(slot)
+        return True

@@ -270,6 +270,40 @@ class TestContracts:
         assert observed == pred, (observed, pred)
         assert eng.obs.watchdog.snapshot()["steady_retraces"] == 0
 
+    def test_predicted_equals_observed_compiles_spec(self):
+        """The acceptance contract for speculative decoding: with the
+        self-draft oracle (accept pattern fully determined: every window
+        fully accepts, no rollbacks) the fused-tick + spec prediction —
+        decode never dispatched, one compile each for verify / propose /
+        reset-tail, one drafter prefill per distinct context length — must
+        equal the observed per-function cache sizes, with zero steady-state
+        retraces."""
+        cfg = make_reduced(all_configs()["glm4-9b"])
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = ContinuousEngine(cfg, params, slots=3, capacity=64, paged=True,
+                               page_size=16, prefix_sharing=True,
+                               prefill_chunk=32, prefill_mode="batched",
+                               spec_draft=(cfg, params), spec_k=3)
+        prompts = [[(i % 50) + 1 for i in range(n)] for n in (5, 20, 40)]
+        for p in prompts:
+            eng.submit(Request(prompt=p, max_new_tokens=6))
+        eng.run_until_done()
+        observed = {name: jit_cache_size(fn) or 0
+                    for name, (fn, _, _) in eng.jitted_functions().items()}
+        pred = predict_compiles(slots=3, capacity=64, page_size=16,
+                                prefill_chunk=32,
+                                workload=Workload((5, 20, 40), 6, 32),
+                                prefill_mode="batched",
+                                spec={"commit_pass":
+                                      eng._spec_commit is not None})
+        assert pred["decode"] == 0  # registered, never dispatched
+        assert pred["verify"] == pred["draft_propose"] == 1
+        assert pred["spec_reset_tail"] == 1
+        assert "spec_commit" not in pred  # glm4 is fully paged
+        assert pred["draft_prefill"] == 3  # one per distinct context length
+        assert observed == pred, (observed, pred)
+        assert eng.obs.watchdog.snapshot()["steady_retraces"] == 0
+
     def test_watchdog_registry_matches_contract(self, tiny_engine):
         """One source of truth: the watchdog's primary classification equals
         the jit registry's, and every contract entry agrees."""

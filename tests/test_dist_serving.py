@@ -321,3 +321,35 @@ for shape in [(2, 4), (4, 2)]:
     assert np.array_equal(np.asarray(rtf), np.asarray(xg))
 print("hier roundtrip OK")
 """ % seed)
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding under an EP mesh: refuse loudly, never miscompute
+# ---------------------------------------------------------------------------
+
+
+class TestSpecUnderEPMesh:
+    def test_spec_draft_raises_clear_not_implemented(self):
+        """Speculation's CoW fork plan is host-side per slot while the EP
+        mesh places the page pool per rank — until the verify pass is
+        taught to shard, arming both together must raise a clear
+        NotImplementedError at engine construction (NOT silently serve
+        wrong tokens or crash mid-tick)."""
+        run_script("""
+import jax
+from repro.configs.registry import all_configs, make_reduced
+from repro.models.model import init_params
+from repro.serving.continuous import ContinuousEngine
+
+cfg = make_reduced(all_configs()["nlg-350m-moe128"]).replace(ep_mesh=(4,))
+params = init_params(cfg.replace(ep_mesh=()), jax.random.PRNGKey(0))
+try:
+    ContinuousEngine(cfg, params, slots=2, capacity=32, paged=True,
+                     page_size=4, spec_draft=(cfg.replace(ep_mesh=()), params))
+except NotImplementedError as e:
+    msg = str(e)
+    assert "expert-parallel" in msg and "spec" in msg, msg
+    print("spec+EP refused OK")
+else:
+    raise AssertionError("spec_draft over an EP mesh must refuse")
+""", n_dev=4)

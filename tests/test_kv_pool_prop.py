@@ -250,3 +250,158 @@ def test_pool_random_trace_invariants(seed):
                 del shadow.holders[p]
     assert pool.free_count == n_pages
     _assert_matches(pool, shadow)
+
+
+# ---------------------------------------------------------------------------
+# Speculative-window run helpers: commit by refcount handoff, rollback by
+# dropping private forks (serving/spec.py's page lifecycle)
+# ---------------------------------------------------------------------------
+
+
+class TestSpecRunHelpers:
+    def test_commit_fork_run_hands_off_shared_base(self):
+        """The normal spec commit: the boundary base stays live for its
+        sharer, the fork (already owned) replaces it — the owner's page
+        count is conserved and nothing is freed."""
+        pool = KVBlockPool(4, 4)
+        (base,) = pool.alloc(1, owner=0)
+        pool.share([base], owner=1)  # prefix sharer
+        (fork,) = pool.alloc(1, owner=0)
+        assert pool.commit_fork_run([base], owner=0) == []
+        assert pool.refcount(base) == 1  # sharer keeps it
+        assert sorted(pool.owned_by(0)) == [fork]
+        pool.check()
+
+    def test_commit_fork_run_frees_base_when_sharer_departed(self):
+        """A sharer preempted mid-speculation leaves the committing owner as
+        the last holder: commit must FREE the base (and report it, so the
+        engine device-resets + prefix-evicts it)."""
+        pool = KVBlockPool(4, 4)
+        (base,) = pool.alloc(1, owner=0)
+        pool.share([base], owner=1)
+        (fork,) = pool.alloc(1, owner=0)
+        pool.release(1)  # sharer departs between fork and commit
+        assert pool.commit_fork_run([base], owner=0) == [base]
+        assert base in [p for p in range(4) if p not in
+                        {q for q in pool.owned_by(0)}]
+        pool.check()
+
+    def test_drop_fork_run_frees_private_forks(self):
+        pool = KVBlockPool(6, 4)
+        forks = pool.alloc(3, owner=2)
+        assert sorted(pool.drop_fork_run(forks, owner=2)) == sorted(forks)
+        assert pool.free_count == 6
+        pool.check()
+
+    def test_drop_fork_run_refuses_shared_page(self):
+        """A rollback page with refcount > 1 means the scheduler leaked it
+        into a table/prefix index — freeing it would corrupt the sharer, so
+        the run must refuse atomically (no partial drops)."""
+        pool = KVBlockPool(6, 4)
+        private = pool.alloc(1, owner=0)
+        (shared,) = pool.alloc(1, owner=0)
+        pool.share([shared], owner=1)
+        with pytest.raises(ValueError, match="not a private fork"):
+            pool.drop_fork_run(private + [shared], owner=0)
+        # atomic refusal: the valid private page was NOT dropped
+        assert sorted(pool.owned_by(0)) == sorted(private + [shared])
+        pool.check()
+
+    def test_drop_fork_run_refuses_foreign_page(self):
+        pool = KVBlockPool(6, 4)
+        (theirs,) = pool.alloc(1, owner=1)
+        with pytest.raises(ValueError, match="not a private fork"):
+            pool.drop_fork_run([theirs], owner=0)
+        assert pool.refcount(theirs) == 1
+        pool.check()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_spec_window_trace_invariants(seed):
+    """Random speculative-window lifecycles vs the shadow model: each owner
+    cycles plan (alloc fresh pages + fork a shared boundary) -> verify ->
+    commit a random prefix of the window (refcount handoff for the
+    boundary, keep the accepted fresh pages) + roll back the rest, with
+    random mid-speculation preemptions (release while a window is open)
+    interleaved.  After 200+ ops and a final drain the pool must be empty
+    with exact refcounts throughout."""
+    rng = np.random.default_rng(seed)
+    n_pages = int(rng.integers(6, 16))
+    pool = KVBlockPool(n_pages, page_size=4)
+    shadow = _Shadow(n_pages)
+    owners = list(range(4))
+    windows = {}  # owner -> {"fresh": [...], "fork": page|None, "base": page|None}
+
+    def _close(owner, accept_n):
+        """Commit accept_n of the window's fresh pages, roll back the rest,
+        hand off the boundary fork (if any)."""
+        w = windows.pop(owner)
+        if w["base"] is not None:
+            was_last = len(shadow.holders[w["base"]]) == 1
+            freed = pool.commit_fork_run([w["base"]], owner)
+            assert freed == ([w["base"]] if was_last else [])
+            shadow.holders[w["base"]].discard(owner)
+            if not shadow.holders[w["base"]]:
+                del shadow.holders[w["base"]]
+        reject = w["fresh"][accept_n:]
+        if reject:
+            assert sorted(pool.drop_fork_run(reject, owner)) == sorted(reject)
+            for p in reject:
+                del shadow.holders[p]
+
+    for step in range(220):
+        op = rng.choice(["plan", "commit", "preempt", "share"])
+        owner = int(rng.choice(owners))
+        if op == "plan" and owner not in windows:
+            k = int(rng.integers(1, 4))
+            # fork a boundary only when this owner shares a page
+            shared = [p for p, h in shadow.holders.items()
+                      if owner in h and len(h) > 1]
+            base = int(rng.choice(shared)) if shared and rng.integers(2) else None
+            need = k + (1 if base is not None else 0)
+            got = pool.alloc(need, owner)
+            if got is None:
+                assert need > len(shadow.free)
+                continue
+            for p in got:
+                shadow.holders[p] = {owner}
+            fork = got.pop() if base is not None else None
+            windows[owner] = {"fresh": got, "fork": fork, "base": base}
+        elif op == "commit" and owner in windows:
+            _close(owner, int(rng.integers(0, len(windows[owner]["fresh"]) + 1)))
+        elif op == "preempt":
+            # release mid-speculation: the open window's pages are the
+            # owner's refs==1 pages, freed with everything else it holds
+            windows.pop(owner, None)
+            held = set(shadow.live_for(owner))
+            expect = {p for p in held if len(shadow.holders[p]) == 1}
+            assert set(pool.release(owner)) == expect
+            for p in held:
+                shadow.holders[p].discard(owner)
+                if not shadow.holders[p]:
+                    del shadow.holders[p]
+        elif op == "share":
+            # never an open window's pages: the engine only shares COMMITTED
+            # prompt pages (prefix index / fork admission), and an in-flight
+            # verify window is invisible to other slots by construction
+            in_flight = {p for w in windows.values()
+                         for p in w["fresh"] + [w["fork"]]}
+            mine = [p for p, h in shadow.holders.items()
+                    if owner in h and len(h) == 1 and p not in in_flight]
+            other = int(rng.choice([o for o in owners if o != owner]))
+            if mine:
+                p = int(rng.choice(mine))
+                pool.share([p], other)
+                shadow.holders[p].add(other)
+        _assert_matches(pool, shadow)
+
+    for owner in owners:
+        windows.pop(owner, None)
+        pool.release(owner)
+        for p in list(shadow.holders):
+            shadow.holders[p].discard(owner)
+            if not shadow.holders[p]:
+                del shadow.holders[p]
+    assert pool.free_count == n_pages, "leaked speculative fork pages"
+    _assert_matches(pool, shadow)

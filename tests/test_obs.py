@@ -506,3 +506,87 @@ class TestIntegration:
             assert set(r) >= {"moe_layers", "dropped_frac", "entropy",
                               "imbalance", "per_layer"}
             assert r["moe_layers"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: accept-rate/tokens-per-verify metrics + spans
+# ---------------------------------------------------------------------------
+
+
+class TestSpeculationObs:
+    def test_spec_metrics_and_spans_from_one_snapshot(self, setup):
+        """Self-draft run: every spec counter/histogram and the per-request
+        speculation lifecycle must be consistent inside ONE ``snapshot()``
+        (the same dict ``--metrics-out`` writes), and the engine tick trace
+        must carry the spec_draft -> spec_verify -> spec_commit span triple
+        plus one spec_commit instant per verify window."""
+        cfg, params = setup
+        obs = Obs(trace=True)
+        k = 3
+        eng = ContinuousEngine(cfg, params, slots=2, capacity=64, paged=True,
+                               page_size=4, spec_draft=(cfg, params),
+                               spec_k=k, obs=obs)
+        rids = [eng.submit(Request(prompt=[i + 1] * 6, max_new_tokens=9))
+                for i in range(3)]
+        done = eng.run_until_done()
+        assert all(len(done[r].tokens) == 9 for r in rids)
+
+        snap = obs.metrics.snapshot()
+        c = snap["counters"]
+        windows = c["spec.verify_windows"]
+        drafted = c["spec.draft_tokens"]
+        accepted = c["spec.accepted_tokens"]
+        assert windows > 0 and drafted > 0
+        assert accepted == drafted, "self-draft must accept every token"
+        assert c["spec.rolled_back_pages"] == 0
+        assert c["spec.committed_pages"] > 0
+        assert c["spec.draft_resyncs"] == 0
+
+        h_rate = snap["histograms"]["spec.accept_rate"]
+        h_tok = snap["histograms"]["spec.tokens_per_verify"]
+        # tokens_per_verify observes EVERY window; accept_rate only k>0 ones
+        assert h_tok["count"] == windows
+        assert 0 < h_rate["count"] <= windows
+        assert h_rate["max"] == 1.0  # self-draft: every rate is exactly 1
+        assert h_rate["min"] == 1.0
+        assert 1.0 <= h_tok["min"] <= h_tok["max"] <= k + 1
+        # every decoded token was emitted by a verify window: the TPOT
+        # histogram and the emitted totals must agree with decode_tokens
+        emitted = sum(s["emitted"]
+                      for m in eng.metrics_log for s in [m.get("spec")] if s)
+        assert c["serve.decode_tokens"] == emitted
+
+        evs = obs.tracer.trace_events(close_open=False)
+        assert _span_stacks_balanced([e for e in evs if e["ph"] in "BE"])
+        eng_spans = [e["name"] for e in evs
+                     if e.get("cat") == "engine" and e["ph"] == "B"]
+        n_draft = eng_spans.count("spec_draft")
+        assert n_draft > 0
+        assert eng_spans.count("spec_verify") == n_draft
+        assert eng_spans.count("spec_commit") == n_draft
+        commits = [e for e in evs if e["ph"] == "i"
+                   and e["name"] == "spec_commit"]
+        assert len(commits) == windows
+        for e in commits:
+            a = e["args"]
+            assert 0 <= a["accepted"] <= a["drafted"] <= k
+            assert 1 <= a["emitted"] <= a["accepted"] + 1
+
+    def test_spec_rollback_and_resync_metrics(self, setup):
+        """A fresh-init drafter rejects nearly everything: rolled-back pages
+        must show up, accept_rate must fall below 1, and (this config mixes
+        non-paged state) partial accepts must resync the drafter."""
+        cfg, params = setup
+        dparams = init_params(cfg, jax.random.PRNGKey(7))
+        obs = Obs()
+        eng = ContinuousEngine(cfg, params, slots=2, capacity=64, paged=True,
+                               page_size=4, spec_draft=(cfg, dparams),
+                               spec_k=3, obs=obs)
+        rid = eng.submit(Request(prompt=[3, 1, 4, 1, 5], max_new_tokens=10))
+        eng.run_until_done()
+        snap = obs.metrics.snapshot()
+        c = snap["counters"]
+        assert c["spec.accepted_tokens"] < c["spec.draft_tokens"]
+        assert c["spec.rolled_back_pages"] > 0
+        h_rate = snap["histograms"]["spec.accept_rate"]
+        assert h_rate["count"] > 0 and h_rate["min"] < 1.0

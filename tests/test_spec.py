@@ -1,0 +1,334 @@
+"""Draft-then-verify speculative decoding (serving/spec.py + the engine's
+``_spec_decode_tick``): the token-exact parity oracle tier plus the
+rollback-invariant engine fuzz.
+
+Greedy speculation must be EXACT — the drafter moves the accept rate, never
+the output — so every test here decodes the same requests through a
+non-speculative ``ContinuousEngine`` and a speculative one and asserts the
+token streams are identical:
+
+  * self-draft oracle (drafter == target: every window fully accepts) and a
+    fresh-init drafter (near-zero accept: every window rolls back) across
+    glm4 (fully paged), gemma3 (window-ring mix) and recurrentgemma (LRU
+    state — the commit pass + drafter-resync path);
+  * the serving feature cross-product speculation must compose with:
+    int8 KV pages, prefix sharing (shared pages fork at the window boundary,
+    commit by refcount handoff), chunked AND batched admission prefill;
+  * window geometry: k=1 degenerate, k spanning a page boundary, k clamped
+    by the remaining budget (including budget 1 => k=0 verify-only windows),
+    eos landing mid-window (the accepted suffix past eos must be truncated);
+  * scheduling: a starved pool forcing mid-speculation preemptions, and
+    fork admissions (submit_n) whose shared tail page CoW-forks on spec
+    windows.
+
+The fuzz tier drives a low-accept drafter + tiny oversubscribed pool for
+hundreds of random-shaped requests and asserts the pool invariants the
+rollback machinery must preserve: ``pool.check()`` green after drain, zero
+leaked fork pages (free_count == n_pages), prefix index fully evicted —
+with output parity on top, so "no leak" can't be bought with wrong tokens.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import all_configs, make_reduced
+from repro.models.model import init_params
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request
+from repro.serving.spec import accept_length
+
+from tests._hyp import given, settings, st
+
+PRE = [7, 7, 3, 5, 1, 2, 9, 4]  # 2 full pages at page_size=4 — shared preamble
+
+ARCHS = ["glm4-9b", "gemma3-27b", "recurrentgemma-2b"]
+
+_SETUP = {}
+
+
+def _setup(arch):
+    """Reduced config + target params (seed 0) + drafter params (seed 1),
+    cached per arch — params are shared read-only across engines."""
+    if arch not in _SETUP:
+        cfg = make_reduced(all_configs()[arch])
+        _SETUP[arch] = (cfg, init_params(cfg, jax.random.PRNGKey(0)),
+                        init_params(cfg, jax.random.PRNGKey(1)))
+    return _SETUP[arch]
+
+
+def _prompts(n=3, lo=3, hi=12, seed=0, vocab=64):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=int(rng.integers(lo, hi))).tolist()
+            for _ in range(n)]
+
+
+def _serve(cfg, params, prompts, n_new, *, n_samples=1, **kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("capacity", 64)
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", 4)
+    eng = ContinuousEngine(cfg, params, **kw)
+    if n_samples > 1:
+        ids = [rid for p in prompts
+               for rid in eng.submit_n(Request(prompt=p, max_new_tokens=n_new),
+                                       n_samples)]
+    else:
+        ids = [eng.submit(Request(prompt=p, max_new_tokens=n_new))
+               for p in prompts]
+    done = eng.run_until_done()
+    return [done[i].tokens for i in ids], eng
+
+
+def _assert_parity_and_drained(cfg, params, prompts, n_new, *, spec_kw,
+                               base_kw=None, n_samples=1):
+    """The oracle: speculative output == non-speculative output, and the
+    speculative engine's pool/prefix fully drained (no leaked fork pages)."""
+    base_kw = dict(base_kw or {})
+    base, _ = _serve(cfg, params, prompts, n_new, n_samples=n_samples,
+                     **base_kw)
+    spec, eng = _serve(cfg, params, prompts, n_new, n_samples=n_samples,
+                       **base_kw, **spec_kw)
+    assert base == spec, (
+        f"speculative greedy decode diverged from the non-speculative "
+        f"engine\nbase={base}\nspec={spec}")
+    eng.pool.check()
+    assert eng.pool.free_count == eng.n_pages, "leaked fork pages"
+    if eng.prefix is not None:
+        assert len(eng.prefix) == 0, "prefix index not fully evicted"
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# accept_length: the pure accept rule
+# ---------------------------------------------------------------------------
+
+
+def test_accept_length_rule():
+    g = [5, 6, 7, 8, 9]
+    assert accept_length([], g) == 0
+    assert accept_length([5, 6, 7], g) == 3  # full accept
+    assert accept_length([5, 6, 0], g) == 2
+    assert accept_length([0, 6, 7], g) == 0  # first token already wrong
+    assert accept_length([5, 0, 7], g) == 1  # post-mismatch agreement ignored
+
+
+# ---------------------------------------------------------------------------
+# Parity: drafter quality moves the accept rate, never the tokens
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_parity_self_oracle(arch):
+    """drafter == target: every draft token must be accepted (the verify
+    argmax IS the drafter argmax), every window emits k+1 tokens."""
+    cfg, params, _ = _setup(arch)
+    eng = _assert_parity_and_drained(
+        cfg, params, _prompts(), 10,
+        spec_kw=dict(spec_draft=(cfg, params), spec_k=3))
+    sp = [m["spec"] for m in eng.metrics_log if "spec" in m]
+    drafted = sum(s["drafted"] for s in sp)
+    assert drafted > 0
+    assert sum(s["accepted"] for s in sp) == drafted, \
+        "self-draft oracle must fully accept every window"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_parity_low_accept_drafter(arch):
+    """Fresh-init drafter: near-zero accept, every window rolls back pages —
+    output must still be token-exact.  recurrentgemma additionally runs the
+    partial-accept drafter-resync path (irreversible recurrent state)."""
+    cfg, params, dparams = _setup(arch)
+    eng = _assert_parity_and_drained(
+        cfg, params, _prompts(), 10,
+        spec_kw=dict(spec_draft=(cfg, dparams), spec_k=3))
+    sp = [m["spec"] for m in eng.metrics_log if "spec" in m]
+    assert sum(s["accepted"] for s in sp) < sum(s["drafted"] for s in sp), \
+        "a fresh-init drafter should not fully accept (rollback untested)"
+    if arch == "recurrentgemma-2b":
+        assert sum(s.get("resyncs", 0) for s in sp) > 0, \
+            "recurrent drafter partial accepts must resync"
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "gemma3-27b"])
+@pytest.mark.parametrize("kv_bits", [0, 8])
+def test_parity_int8_kv(arch, kv_bits):
+    cfg, params, dparams = _setup(arch)
+    _assert_parity_and_drained(
+        cfg, params, _prompts(), 8,
+        base_kw=dict(kv_cache_bits=kv_bits),
+        spec_kw=dict(spec_draft=(cfg, dparams), spec_k=3))
+
+
+@pytest.mark.parametrize("prefill_mode", ["chunked", "batched"])
+def test_parity_prefill_modes(prefill_mode):
+    cfg, params, dparams = _setup("glm4-9b")
+    _assert_parity_and_drained(
+        cfg, params, _prompts(n=4), 9,
+        base_kw=dict(prefill_mode=prefill_mode, slots=2),  # forces queueing
+        spec_kw=dict(spec_draft=(cfg, dparams), spec_k=3))
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "gemma3-27b"])
+def test_parity_prefix_sharing(arch):
+    """Prompts repeating a full-page preamble share pages; fork admissions
+    (submit_n) share ALL prompt pages.  Speculation must CoW-fork the shared
+    boundary page per window and commit by refcount handoff."""
+    cfg, params, dparams = _setup(arch)
+    prompts = [PRE + [11, 12], PRE + [11, 12], PRE + [13]]
+    _assert_parity_and_drained(
+        cfg, params, prompts, 9,
+        base_kw=dict(prefix_sharing=True),
+        spec_kw=dict(spec_draft=(cfg, dparams), spec_k=3))
+
+
+def test_parity_fork_admissions():
+    cfg, params, dparams = _setup("glm4-9b")
+    eng = _assert_parity_and_drained(
+        cfg, params, [PRE + [11, 12]], 9, n_samples=3,
+        base_kw=dict(prefix_sharing=True),
+        spec_kw=dict(spec_draft=(cfg, dparams), spec_k=3))
+    assert eng.cow_copies > 0, \
+        "3 samples decoding off one set of prompt pages must fork"
+
+
+def test_parity_k1_degenerate():
+    cfg, params, dparams = _setup("glm4-9b")
+    eng = _assert_parity_and_drained(
+        cfg, params, _prompts(), 8,
+        spec_kw=dict(spec_draft=(cfg, dparams), spec_k=1))
+    sp = [m["spec"] for m in eng.metrics_log if "spec" in m]
+    assert all(s["drafted"] <= s["windows"] for s in sp)
+
+
+def test_parity_k_spans_page_boundary():
+    """k+1 = 7 window positions over page_size-4 pages: every window covers
+    two or three table entries, so commits and rollbacks constantly split
+    across the boundary."""
+    cfg, params, dparams = _setup("glm4-9b")
+    _assert_parity_and_drained(
+        cfg, params, _prompts(), 14,
+        spec_kw=dict(spec_draft=(cfg, dparams), spec_k=6))
+
+
+def test_parity_budget_clamp():
+    """max_new below k: the window clamps to the remaining budget (k=0 pure
+    verify on the final token), and never emits past the budget."""
+    cfg, params, dparams = _setup("glm4-9b")
+    for n_new in (1, 2, 3):
+        base, _ = _serve(cfg, params, _prompts(), n_new)
+        spec, _ = _serve(cfg, params, _prompts(), n_new,
+                         spec_draft=(cfg, dparams), spec_k=4)
+        assert base == spec
+        assert all(len(t) == n_new for t in spec)
+
+
+def test_parity_eos_mid_window():
+    """Pick a token the run actually emits as eos: the speculative engine
+    must truncate the accepted suffix at eos exactly where the
+    one-token-at-a-time engine stops."""
+    cfg, params, _ = _setup("glm4-9b")
+    probe, _ = _serve(cfg, params, _prompts(), 10)
+    eos = probe[0][4]  # 5th emitted token => eos lands mid-window at k=3
+    _assert_parity_and_drained(
+        cfg, params, _prompts(), 10,
+        base_kw=dict(eos_id=eos),
+        spec_kw=dict(spec_draft=(cfg, params), spec_k=3))
+
+
+def test_parity_cross_family_drafter():
+    """A drafter of a different ARCHITECTURE (gemma3 window-ring drafting
+    for the fully-paged glm4 target) — exercises the drafter abstraction
+    end-to-end; reduced configs share the token space."""
+    tcfg, tparams, _ = _setup("glm4-9b")
+    dcfg, dparams, _ = _setup("gemma3-27b")
+    if dcfg.vocab_size != tcfg.vocab_size:
+        pytest.skip("reduced vocabs diverged; cross-family needs one space")
+    _assert_parity_and_drained(
+        tcfg, tparams, _prompts(), 9,
+        spec_kw=dict(spec_draft=(dcfg, dparams), spec_k=3))
+
+
+def test_parity_under_preemption():
+    """A pool provisioned well below the worst case forces preemptions mid
+    run (some mid-speculation: window allocation preempts the youngest
+    slot); re-admitted requests must resume token-exact and the drafter's
+    watermark must survive the slot churn."""
+    cfg, params, dparams = _setup("glm4-9b")
+    kw = dict(slots=3, capacity=32, page_size=4, n_pages=14)
+    base, b_eng = _serve(cfg, params, _prompts(n=5, seed=3), 12, **kw)
+    spec, eng = _serve(cfg, params, _prompts(n=5, seed=3), 12,
+                       spec_draft=(cfg, dparams), spec_k=3, **kw)
+    assert base == spec
+    assert eng.preemptions > 0, "pool was meant to starve (tune n_pages)"
+    eng.pool.check()
+    assert eng.pool.free_count == eng.n_pages
+
+
+# ---------------------------------------------------------------------------
+# Rollback-invariant engine fuzz: random shapes, starved pool, bad drafter
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_fuzz_rollback_invariants(seed):
+    """Random request shapes through a low-accept drafter over a tiny
+    oversubscribed pool: hundreds of verify windows, nearly all rolling
+    back, interleaved with forced preemptions — after drain the pool must
+    be byte-for-byte clean (check() green, zero leaked forks, prefix index
+    empty) and the stream token-exact vs the non-speculative engine."""
+    cfg, params, dparams = _setup("glm4-9b")
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(1, 14))).tolist()
+               for _ in range(6)]
+    n_new = int(rng.integers(4, 16))
+    k = int(rng.integers(1, 5))
+    kw = dict(slots=3, capacity=32, page_size=4,
+              n_pages=int(rng.integers(12, 20)),
+              prefix_sharing=bool(rng.integers(0, 2)))
+    base, _ = _serve(cfg, params, prompts, n_new, **kw)
+    spec, eng = _serve(cfg, params, prompts, n_new,
+                       spec_draft=(cfg, dparams), spec_k=k, **kw)
+    assert base == spec
+    sp = [m["spec"] for m in eng.metrics_log if "spec" in m]
+    assert sum(s["windows"] for s in sp) >= 10
+    eng.pool.check()
+    assert eng.pool.free_count == eng.n_pages, "leaked fork pages"
+    if eng.prefix is not None:
+        assert len(eng.prefix) == 0
+
+
+# ---------------------------------------------------------------------------
+# Config validation: the unsupported corners must refuse loudly
+# ---------------------------------------------------------------------------
+
+
+def test_spec_requires_paged():
+    cfg, params, _ = _setup("glm4-9b")
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousEngine(cfg, params, paged=False,
+                         spec_draft=(cfg, params))
+
+
+def test_spec_requires_greedy():
+    cfg, params, _ = _setup("glm4-9b")
+    with pytest.raises(ValueError, match="greedy"):
+        ContinuousEngine(cfg, params, paged=True, page_size=4,
+                         temperature=0.7, spec_draft=(cfg, params))
+
+
+def test_spec_requires_matching_vocab():
+    cfg, params, _ = _setup("glm4-9b")
+    import dataclasses
+    bad = dataclasses.replace(cfg, vocab_size=cfg.vocab_size + 1)
+    with pytest.raises(ValueError, match="vocab"):
+        ContinuousEngine(cfg, params, paged=True, page_size=4,
+                         spec_draft=(bad, params))
+
+
+def test_spec_k_must_be_positive():
+    cfg, params, _ = _setup("glm4-9b")
+    with pytest.raises(ValueError, match="spec_k"):
+        ContinuousEngine(cfg, params, paged=True, page_size=4,
+                         spec_draft=(cfg, params), spec_k=0)
